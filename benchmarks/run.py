@@ -1,0 +1,40 @@
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+
+Prints ``name,us_per_call,derived`` CSV — one section per paper table/figure
+plus the JAX-side kernel and roofline benches when their artifacts exist.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    print("name,us_per_call,derived")
+
+    from benchmarks import paper_figs
+    for name, us, derived in paper_figs.all_rows(fast=fast):
+        print(f"{name},{us:.2f},{derived}")
+
+    from benchmarks import protocol_micro
+    for name, us, derived in protocol_micro.all_rows():
+        print(f"{name},{us:.2f},{derived}")
+
+    try:
+        from benchmarks import kernel_bench
+        for name, us, derived in kernel_bench.all_rows(fast=fast):
+            print(f"{name},{us:.2f},{derived}")
+    except Exception as e:                                 # pragma: no cover
+        print(f"kernel_bench_skipped,0,{type(e).__name__}", file=sys.stderr)
+
+    try:
+        from benchmarks import roofline
+        for name, us, derived in roofline.all_rows():
+            print(f"{name},{us:.2f},{derived}")
+    except Exception as e:                                 # pragma: no cover
+        print(f"roofline_skipped,0,{type(e).__name__}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Reproduce the paper's headline comparison on your laptop:
+
+    PYTHONPATH=src python examples/dsm_apps.py [app]
+
+Runs the chosen application (default: all four) on 1..8 simulated servers
+under all three DSM protocols and prints the Fig. 5-style table.
+"""
+
+import sys
+
+from repro.apps import APPS
+from repro.apps.dataframe import plain_dataframe_us
+from repro.apps.gemm import plain_gemm_us
+from repro.apps.kvstore import plain_kvstore_us
+from repro.apps.socialnet import plain_socialnet_us
+
+PLAIN = {"gemm": plain_gemm_us, "dataframe": plain_dataframe_us,
+         "kvstore": plain_kvstore_us, "socialnet": plain_socialnet_us}
+
+
+def main():
+    apps = sys.argv[1:] or list(APPS)
+    for app in apps:
+        plain = PLAIN[app]()
+        print(f"\n== {app} (normalized to the original single-node program)")
+        print(f"   {'backend':8s} " + "".join(f"{n}n      " for n in (1, 2, 4, 8)))
+        for backend in ("drust", "gam", "grappa"):
+            row = []
+            for n in (1, 2, 4, 8):
+                r = APPS[app](n, backend=backend)
+                row.append(f"{plain / r.makespan_us:5.2f}x ")
+            print(f"   {backend:8s} " + " ".join(row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Serving example: batched decode with ownership-paged KV cache, prefix
+sharing across requests, and zero-invalidation online weight refresh.
+
+    PYTHONPATH=src python examples/serve_kv.py
+"""
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core.jaxstate import OwnedState
+from repro.models import init_params
+from repro.serve import ServeEngine
+
+
+def main():
+    cfg = configs.smoke("granite-34b")      # MQA: maximal KV read sharing
+    weights = OwnedState("weights", init_params(cfg, jax.random.PRNGKey(0)))
+    engine = ServeEngine(cfg, weights, slots=4, max_len=256)
+
+    rng = np.random.default_rng(0)
+    system_prompt = list(rng.integers(0, cfg.vocab, size=cfg.attn_chunk))
+    for i in range(12):
+        user = list(rng.integers(0, cfg.vocab, size=6 + i % 5))
+        engine.submit(system_prompt + user, max_new=12)
+
+    ticks = 0
+    while engine.queue or engine.active:
+        engine.step()
+        ticks += 1
+        if ticks % 10 == 0:             # online trainer pushes new weights
+            with weights.borrow_mut() as m:
+                m.set(m.deref_mut())
+
+    st = engine.stats()
+    print(f"decode ticks: {st['steps']}")
+    print(f"kv cache: {st['kv']} — the shared system prompt is ONE page "
+          f"borrowed by every request")
+    print(f"weight refreshes {st['weight_refreshes']} vs zero-comm hits "
+          f"{st['weight_hits']} (no invalidation messages, ever)")
+
+
+if __name__ == "__main__":
+    main()

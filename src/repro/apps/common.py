@@ -1,0 +1,59 @@
+"""Shared harness for the evaluation applications."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import Cluster
+
+
+@dataclass
+class AppResult:
+    app: str
+    backend: str
+    n_servers: int
+    ops: int
+    makespan_us: float
+    net: dict = field(default_factory=dict)
+    extra: dict = field(default_factory=dict)
+
+    @property
+    def throughput(self) -> float:
+        return self.ops / (self.makespan_us / 1e6) if self.makespan_us else 0.0
+
+
+def plain_time_us(total_cycles: float, total_local_accesses: int,
+                  cores: int, ghz: float = 2.6,
+                  local_access_us: float = 0.14) -> float:
+    """The original single-machine program: perfect parallelism over
+    ``cores``, no DSM checks, all accesses local."""
+    return (total_cycles / (ghz * 1e3) + total_local_accesses * local_access_us) / cores
+
+
+def zipf_keys(n_ops: int, n_keys: int, alpha: float = 0.99,
+              seed: int = 0) -> np.ndarray:
+    """YCSB-style zipfian key sequence (default skew 0.99)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    p /= p.sum()
+    return rng.choice(n_keys, size=n_ops, p=p)
+
+
+def make_cluster(n_servers: int, backend: str, cores: int = 16,
+                 **kw) -> Cluster:
+    return Cluster(n_servers, backend=backend, cores_per_server=cores, **kw)
+
+
+def spread_threads(cluster: Cluster, per_server: int):
+    """One batch of worker threads, evenly spread (paper methodology for the
+    baselines; DRust's controller could do this adaptively)."""
+    ths = []
+    for s in range(cluster.sim.n):
+        for _ in range(per_server):
+            th = cluster.main_thread(0)
+            th.server = s
+            ths.append(th)
+    return ths

@@ -1,0 +1,122 @@
+"""DataFrame (§7.1): columnar analytics with a shared index table.
+
+Mirrors the paper's Polars-based workload: tables are columns partitioned
+by row into chunks (heap objects).  Every operation builds a shared *index
+table* mapping destination chunks to source chunks — index-builder threads
+WRITE entries concurrently (each builder owns its entry shard: SWMR), then
+worker threads probe SEVERAL entries (hash-table probing) and process the
+source chunks (low compute intensity: the coherence overhead stands out,
+Fig. 5a).  Dependent operations re-read chunks (cacheable reuse).
+
+Affinity annotations (§4.1.3, Fig. 6):
+  * ``use_tbox``     — chunks of a column are tied into one affinity group:
+                       fetched in a single batched READ, deref check skipped.
+  * ``use_spawn_to`` — columnar operators run on the server hosting their
+                       input column instead of round-robin placement.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import addr as A
+from .common import AppResult, make_cluster, spread_threads
+
+CYCLES_PER_BYTE = 110.13
+SIMD_LANES = 8                    # AVX2 over f64 rows
+
+
+def run_dataframe(n_servers: int, backend: str = "drust",
+                  n_columns: int = 8, chunks_per_column: int = 32,
+                  chunk_rows: int = 512, n_ops: int = 8,
+                  probes: int = 4, workers_per_server: int = 4,
+                  cores: int = 16, use_tbox: bool = False,
+                  use_spawn_to: bool = False, seed: int = 0) -> AppResult:
+    use_tbox = use_tbox and backend == "drust"
+    use_spawn_to = use_spawn_to and backend == "drust"
+    cl = make_cluster(n_servers, backend, cores)
+    rng = np.random.default_rng(seed)
+    chunk_bytes = chunk_rows * 8
+    chunk_cycles = CYCLES_PER_BYTE * chunk_bytes / SIMD_LANES
+
+    boot = cl.main_thread(0)
+    columns = []                    # column -> list of chunk handles
+    for c in range(n_columns):
+        prev = None
+        handles = []
+        for k in range(chunks_per_column):
+            data = rng.standard_normal(chunk_rows)
+            if use_tbox and prev is not None:
+                # Listing 3: chunks chained with TBox — one affinity group,
+                # co-located with the head, fetched in a single batched READ.
+                h = cl.backend.alloc(boot, chunk_bytes, data, tie_to=prev)
+            else:
+                srv = (c if use_tbox else c * chunks_per_column + k) % n_servers
+                h = cl.backend.alloc(boot, chunk_bytes, data, server=srv)
+            prev = h
+            handles.append(h)
+        columns.append(handles)
+
+    # Shared index table: one entry object per destination chunk.
+    index = [cl.backend.alloc(boot, 64, None, server=k % n_servers)
+             for k in range(chunks_per_column)]
+    boot.t_us = 0.0
+    for s in cl.sim.servers:
+        s.cpu_busy_us = 0.0
+
+    ths = spread_threads(cl, workers_per_server)
+    ops = 0
+    w = 0
+    # n_ops independent single-column queries run concurrently (h2oai-style);
+    # iteration is k-major so at every step the in-flight items span all
+    # columns.  Index builders and workers interleave on the shared table: a
+    # fresh entry is written, then probed by workers on other servers — the
+    # write/read ping-pong that hammers invalidation-based protocols.
+    for k in range(chunks_per_column):
+        for op in range(n_ops):
+            col = columns[op % n_columns]
+            entry = index[k]
+            # builder and worker pools rotate independently (co-prime offsets)
+            th = ths[w % len(ths)]
+            srcs = [(k + d) % chunks_per_column for d in range(2)]
+            cl.backend.write(th, entry, srcs)
+            ops += 1
+            if use_spawn_to:
+                data_srv = A.server_of(col[k].g)
+                cand = [t for t in ths if t.server == data_srv]
+                th = min(cand, key=lambda t: t.t_us) if cand \
+                    else ths[(w + len(ths) // 2) % len(ths)]
+            else:
+                th = ths[(w + len(ths) // 2) % len(ths)]
+            w += 1
+            for p in range(1, probes):                    # hash-table probing
+                cl.backend.read(th, index[(k - p) % len(index)])
+            srcs = cl.backend.read(th, index[k])
+            if use_tbox:
+                # iterating the column dereferences the head TBox chain:
+                # the whole group lands in the local cache in one READ
+                cl.backend.read(th, col[0])
+            acc = 0.0
+            for s_idx in srcs:
+                chunk = cl.backend.read(th, col[s_idx])   # scan pass
+                acc += float(np.sum(chunk))
+                cl.sim.compute(th, chunk_cycles)
+                chunk = cl.backend.read(th, col[s_idx])   # materialize pass
+                cl.sim.compute(th, chunk_cycles * 0.25)
+            out = cl.backend.alloc(th, chunk_bytes, acc)
+            cl.backend.write(th, out, acc)
+            ops += 1
+
+    return AppResult("dataframe", backend, n_servers, ops, cl.makespan_us(),
+                     net=cl.sim.snapshot()["net"],
+                     extra={"use_tbox": use_tbox, "use_spawn_to": use_spawn_to})
+
+
+def plain_dataframe_us(n_columns: int = 8, chunks_per_column: int = 32,
+                       chunk_rows: int = 512, n_ops: int = 8,
+                       probes: int = 4, workers_per_server: int = 4) -> float:
+    chunk_bytes = chunk_rows * 8
+    chunk_cycles = CYCLES_PER_BYTE * chunk_bytes / SIMD_LANES
+    compute = n_ops * chunks_per_column * 2 * chunk_cycles * 1.25
+    accesses = n_ops * chunks_per_column * (1 + probes + 1 + 4 + 2)
+    return (compute / 2.6e3 + accesses * 0.14) / workers_per_server

@@ -1,0 +1,82 @@
+"""KV Store (§7.1): chained-hash in-memory cache under YCSB zipf load.
+
+The paper's most DSM-unfriendly app: poor locality, low compute intensity
+(~48 cycles/byte), and mutex-synchronized buckets whose shared-state
+semantics defeat ownership-based ordering — DRust degenerates gracefully
+(one-sided RDMA atomics for the mutex + single object fetch), GAM pays
+two-sided synchronization, Grappa serializes every hot key on its home
+core (the skew collapse in Fig. 5d, and the dip every system takes when
+going from one to two nodes).
+
+The bucket mutex guards only the chain walk (as in Memcached); value
+processing happens outside the lock.  Workload: 90% GET / 10% SET over
+zipf(0.99) keys (YCSB defaults).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DMutex
+from .common import AppResult, make_cluster, spread_threads, zipf_keys
+
+CYCLES_PER_BYTE = 48.15
+SIMD_LANES = 8                   # value memcmp/copy vectorizes
+
+
+def run_kvstore(n_servers: int, backend: str = "drust",
+                n_keys: int = 4096, value_bytes: int = 1024,
+                n_ops: int = 3000, get_frac: float = 0.9,
+                workers_per_server: int = 4, cores: int = 16,
+                nodes_per_bucket: int = 2, seed: int = 0) -> AppResult:
+    cl = make_cluster(n_servers, backend, cores)
+    rng = np.random.default_rng(seed)
+    boot = cl.main_thread(0)
+
+    n_buckets = max(1, n_keys // nodes_per_bucket)
+    buckets = []                     # bucket -> (mutex, [value handles])
+    for b in range(n_buckets):
+        mtx = DMutex(cl, boot, value=b, size=64)
+        nodes = [cl.backend.alloc(boot, value_bytes, bytes(value_bytes),
+                                  server=b % n_servers)
+                 for _ in range(nodes_per_bucket)]
+        buckets.append((mtx, nodes))
+
+    boot.t_us = 0.0
+    for s in cl.sim.servers:
+        s.cpu_busy_us = 0.0
+
+    ths = spread_threads(cl, workers_per_server)
+    keys = zipf_keys(n_ops, n_keys, seed=seed)
+    is_get = rng.random(n_ops) < get_frac
+    value_cycles = CYCLES_PER_BYTE * value_bytes / SIMD_LANES
+
+    for i in range(n_ops):
+        th = ths[i % len(ths)]
+        key = int(keys[i])
+        b, j = divmod(key, nodes_per_bucket)
+        mtx, nodes = buckets[b]
+
+        # Lock guards the chain walk only (hash + j pointer hops).
+        def chain_walk(_obj, th=th, j=j):
+            for _ in range(j + 1):
+                cl.sim.local_access(th)
+            return None
+        mtx.with_lock(th, chain_walk)
+
+        # Value access outside the lock (SWMR per key).
+        val = cl.backend.read(th, nodes[j])
+        cl.sim.compute(th, value_cycles)
+        if not is_get[i]:
+            cl.backend.write(th, nodes[j], bytes(value_bytes))
+
+    return AppResult("kvstore", backend, n_servers, n_ops, cl.makespan_us(),
+                     net=cl.sim.snapshot()["net"])
+
+
+def plain_kvstore_us(n_ops: int = 3000, value_bytes: int = 1024,
+                     workers_per_server: int = 4,
+                     nodes_per_bucket: int = 2) -> float:
+    per_op = (CYCLES_PER_BYTE * value_bytes / SIMD_LANES / 2.6e3
+              + (nodes_per_bucket / 2 + 3) * 0.14)       # chase + lock + read
+    return n_ops * per_op / workers_per_server

@@ -1,0 +1,31 @@
+"""repro.core — DRust's ownership-guided DSM, protocol-exact, plus the
+JAX-facing ownership state store (``jaxstate``).
+
+Entry points:
+  * ``Cluster(n, backend=...)`` — simulated deployment (drust | gam | grappa)
+  * ``DrustRuntime`` — the coherence protocol engine (Algorithms 1-8)
+  * ``OwnedState`` — colored, borrow-checked distributed pytrees for JAX
+"""
+
+from . import addr
+from .baselines import GamBackend, GrappaBackend, GHandle
+from .cache import LocalCache
+from .channel import Channel
+from .fault import Replicator
+from .heap import GlobalHeap, Obj, Partition
+from .jaxstate import (ColoredAddr, OwnedState, ReplicaSlot, StateCache,
+                       StateMutRef, StateRef)
+from .net import CostModel, NetStats, Sim
+from .ownership import (BorrowError, DBox, DrustBackend, DrustRuntime, MutRef,
+                        Ref, StackRef)
+from .runtime import Cluster, GlobalController, Scheduler, Thread
+from .sync import DAtomic, DMutex
+
+__all__ = [
+    "addr", "BorrowError", "Channel", "Cluster", "ColoredAddr", "CostModel",
+    "DAtomic", "DBox", "DMutex", "DrustBackend", "DrustRuntime", "GamBackend",
+    "GHandle", "GlobalController", "GlobalHeap", "GrappaBackend",
+    "LocalCache", "MutRef", "NetStats", "Obj", "OwnedState", "Partition",
+    "Ref", "ReplicaSlot", "Replicator", "Scheduler", "Sim", "StackRef",
+    "StateCache", "StateMutRef", "StateRef", "Thread",
+]

@@ -1,0 +1,84 @@
+"""Per-server read-only cache: the hashmap H of Algorithms 2/4/7.
+
+Maps a *colored* global address to (local copy address, live-ref count).
+Copies live in the server's regular heap partition (the cache is a "virtual"
+aggregation, §4.1.1); entries with refcount 0 are reclaimed lazily under
+memory pressure.  Because keys are colored, any write (which bumps the color
+or moves the object) makes stale entries unreachable — they age out without
+any invalidation message.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from . import addr as A
+from .heap import Partition
+
+
+@dataclass
+class CacheEntry:
+    local: int          # raw address of the copy in the local partition
+    refcount: int
+
+
+class LocalCache:
+    def __init__(self, server: int, partition: Partition):
+        self.server = server
+        self.partition = partition
+        self.entries: dict[int, CacheEntry] = {}   # colored g -> entry
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, colored_g: int) -> CacheEntry | None:
+        e = self.entries.get(colored_g)
+        if e is not None:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return e
+
+    def insert(self, colored_g: int, local_raw: int, refcount: int = 1) -> CacheEntry:
+        e = CacheEntry(local_raw, refcount)
+        self.entries[colored_g] = e
+        return e
+
+    def inc(self, colored_g: int) -> CacheEntry:
+        e = self.entries[colored_g]
+        e.refcount += 1
+        return e
+
+    def dec(self, colored_g: int) -> None:
+        e = self.entries.get(colored_g)
+        if e is not None and e.refcount > 0:
+            e.refcount -= 1
+
+    def remove(self, colored_g: int) -> CacheEntry | None:
+        return self.entries.pop(colored_g, None)
+
+    def invalidate_raw(self, raw: int) -> int:
+        """Async invalidation on dealloc/move (Appendix B.4): drop every entry
+        whose underlying raw address matches, freeing the local copies."""
+        victims = [g for g in self.entries if A.clear_color(g) == raw]
+        for g in victims:
+            e = self.entries.pop(g)
+            if self.partition.contains(e.local):
+                self.partition.free(e.local)
+        return len(victims)
+
+    def evict_unreferenced(self) -> int:
+        """Lazy reclamation under memory pressure (§4.2.1)."""
+        victims = [g for g, e in self.entries.items() if e.refcount <= 0]
+        freed = 0
+        for g in victims:
+            e = self.entries.pop(g)
+            if self.partition.contains(e.local):
+                freed += self.partition.get(e.local).size
+                self.partition.free(e.local)
+        return freed
+
+    @property
+    def bytes_cached(self) -> int:
+        return sum(self.partition.get(e.local).size
+                   for e in self.entries.values()
+                   if self.partition.contains(e.local))

@@ -1,0 +1,50 @@
+"""Distributed mpsc channels (§4.1.2).
+
+Because the heap is globally shared, a message containing Box pointers /
+references is valid on any server: the sender pushes the object *as is*
+(pointer words, no serialization) and the receiver recovers it by type
+conversion (no deserialization).  Cross-server sends cost one two-sided
+message of the pointer bytes; same-server sends are queue ops.
+
+This is the mechanism behind the SocialNet result: pass-by-reference RPC
+eliminates the serialize/deserialize cycle entirely.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Any
+
+POINTER_BYTES = 16      # colored global address + extension word
+
+
+class Channel:
+    def __init__(self, cluster, capacity: int = 1 << 16):
+        self.cluster = cluster
+        self.q: deque = deque()
+        self.capacity = capacity
+        self.sent = 0
+        self.recv_server: int | None = None   # pinned at rx() time
+
+    def send(self, th, value: Any, nbytes: int | None = None) -> None:
+        """``nbytes`` is the wire size: pointer words for references (the
+        DRust fast path), or the full payload for by-value sends."""
+        sim = self.cluster.sim
+        wire = POINTER_BYTES if nbytes is None else nbytes
+        if self.recv_server is not None and self.recv_server != th.server:
+            sim.rpc(th, self.recv_server, req_bytes=wire, resp_bytes=0)
+        else:
+            sim.local_access(th)
+        self.q.append((value, th.t_us))
+        self.sent += 1
+
+    def recv(self, th) -> Any:
+        sim = self.cluster.sim
+        self.recv_server = th.server
+        sim.local_access(th)
+        value, t_sent = self.q.popleft()
+        th.t_us = max(th.t_us, t_sent)       # happens-before: msg arrival
+        return value
+
+    def __len__(self) -> int:
+        return len(self.q)

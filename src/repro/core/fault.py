@@ -1,0 +1,121 @@
+"""Fault tolerance (§4.2.3): replicated heap partitions with epoch-batched
+write-back and backup promotion.
+
+Each server's heap partition has a backup on another server, at the same
+virtual addresses.  Threads are *not* replicated.  A mutable borrow batches
+its modifications; the write-back to the backup is delayed until the object
+becomes visible to other servers — i.e. at **ownership transfer** (and at
+explicit epoch boundaries, which is how the JAX training loop uses this:
+one flush per train step).  On failure the controller promotes the backup
+partition to primary and enlists a fresh backup.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from . import addr as A
+from .heap import Obj
+from .ownership import _clone
+
+
+class Replicator:
+    def __init__(self, cluster):
+        self.cluster = cluster
+        rt = cluster.drust
+        self.rt = rt
+        n = cluster.sim.n
+        self.backup_of = {s: (s + 1) % n for s in range(n)}
+        # backup stores: primary server -> {raw addr -> payload snapshot}
+        self.replicas: dict[int, dict[int, Any]] = {s: {} for s in range(n)}
+        self.pending: set[int] = set()          # dirty raw addrs, not yet flushed
+        self.failed: set[int] = set()
+        self.flushes = 0
+        self.bytes_replicated = 0
+        rt.on_write_visible = self._on_write
+        rt.on_alloc = self._on_alloc
+        rt.on_free = self._on_free
+        rt.on_transfer = self._on_transfer
+
+    # -- hooks ---------------------------------------------------------------
+    def _on_alloc(self, raw: int) -> None:
+        self.pending.add(raw)
+
+    def _on_write(self, raw: int) -> None:
+        # Batched: mark dirty; actual write-back deferred to the epoch edge.
+        self.pending.add(raw)
+
+    def _on_free(self, raw: int) -> None:
+        self.pending.discard(raw)
+        self.replicas[A.server_of(raw)].pop(raw, None)
+
+    def _on_transfer(self, raw: int) -> None:
+        self.flush_addr(raw)
+
+    # -- flushing --------------------------------------------------------------
+    def flush_addr(self, raw: int) -> None:
+        if raw not in self.pending or not self.rt.heap.contains(raw):
+            self.pending.discard(raw)
+            return
+        primary = A.server_of(raw)
+        obj = self.rt.heap.get(raw)
+        self.replicas[primary][raw] = _clone(obj.data)
+        backup = self.backup_of[primary]
+        self.cluster.sim.async_msg(backup, obj.size)      # off critical path
+        self.bytes_replicated += obj.size
+        self.flushes += 1
+        self.pending.discard(raw)
+
+    def flush_epoch(self) -> int:
+        """Flush every dirty object (train-step / program epoch boundary)."""
+        n = 0
+        for raw in list(self.pending):
+            self.flush_addr(raw)
+            n += 1
+        return n
+
+    # -- failure handling --------------------------------------------------------
+    def fail(self, server: int) -> None:
+        """Crash ``server``: its primary partition contents are lost."""
+        self.failed.add(server)
+        part = self.rt.heap.partitions[server]
+        part.objects.clear()
+        part.used = 0
+
+    def promote(self, server: int) -> int:
+        """Promote the backup of ``server``'s partition: restore every
+        replicated object at its original virtual address; enlist a new
+        backup (cost: re-replication of the partition)."""
+        part = self.rt.heap.partitions[server]
+        restored = 0
+        for raw, data in self.replicas[server].items():
+            size = max(1, _sizeof(data))
+            part.objects[raw] = Obj(_clone(data), size)
+            part.used += size
+            restored += 1
+        # enlist a new backup server and re-replicate
+        n = self.cluster.sim.n
+        new_backup = (self.backup_of[server] + 1) % n
+        while new_backup in self.failed or new_backup == server:
+            new_backup = (new_backup + 1) % n
+        self.backup_of[server] = new_backup
+        for raw, data in self.replicas[server].items():
+            self.cluster.sim.async_msg(new_backup, max(1, _sizeof(data)))
+        self.failed.discard(server)
+        return restored
+
+    def recover(self, server: int) -> int:
+        """fail-over entry point used by the controller."""
+        return self.promote(server)
+
+
+def _sizeof(data: Any) -> int:
+    try:
+        import numpy as np
+        if isinstance(data, np.ndarray):
+            return int(data.nbytes)
+    except Exception:       # pragma: no cover
+        pass
+    if isinstance(data, bytes):
+        return len(data)
+    return 64

@@ -1,0 +1,169 @@
+"""Deterministic cluster simulation substrate: virtual clocks + RDMA cost model.
+
+The coherence protocols in this package are *control-plane* algorithms; their
+message complexity is hardware-independent.  We execute them for real (real
+heaps, caches, refcounts, payload bytes) and charge costs on a deterministic
+virtual clock, calibrated against the paper's measurements (§3):
+
+  * one-sided RDMA read of a 512 B object  ~ 3.6 us
+  * GAM uncached 512 B read (directory)    ~ 16  us  (77% coherence overhead)
+  * Table 2: local deref 364 cycles (plain) vs 395 cycles (DRust check)
+
+Latency is charged to the *calling thread's* clock (its critical path); CPU
+processing for two-sided messages is additionally charged to the serving
+server's busy counter — that is what makes delegation (Grappa) bottleneck on
+the home server of hot objects, reproducing the paper's skew results.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class CostModel:
+    # Network (InfiniBand 40 Gbps, ConnectX-3-era latencies).
+    one_sided_base_us: float = 3.5      # RDMA READ/WRITE verb latency floor
+    two_sided_rtt_us: float = 3.0       # SEND/RECV round trip (control msgs)
+    atomic_verb_us: float = 3.0         # RDMA FAA / CAS
+    bw_bytes_per_us: float = 5000.0     # 40 Gbps ~ 5 GB/s payload bandwidth
+    # CPU.
+    ghz: float = 2.6                    # Xeon E5-2640 v3
+    local_access_us: float = 0.14       # ~364 cycles: local object deref
+    deref_check_us: float = 0.012       # ~31 cycles: DRust pointer check
+    msg_proc_us: float = 1.0            # handler cost for a two-sided message
+    dir_proc_us: float = 3.0            # directory state machine per hop (GAM)
+    delegation_proc_us: float = 1.2     # delegated op execution (Grappa)
+    alloc_us: float = 0.2               # heap allocator fast path
+    hashmap_us: float = 0.05            # cache hashmap lookup/insert
+
+    def xfer_us(self, nbytes: int) -> float:
+        return nbytes / self.bw_bytes_per_us
+
+    def cycles_us(self, cycles: float) -> float:
+        return cycles / (self.ghz * 1e3)
+
+
+@dataclass
+class ServerStats:
+    cpu_busy_us: float = 0.0            # CPU time consumed on this server
+    bytes_in: int = 0
+    bytes_out: int = 0
+    msgs: int = 0
+
+
+@dataclass
+class NetStats:
+    one_sided_reads: int = 0
+    one_sided_writes: int = 0
+    two_sided_msgs: int = 0
+    atomics: int = 0
+    async_msgs: int = 0
+    invalidations: int = 0
+    bytes_moved: int = 0
+    round_trips: int = 0
+
+    def total_msgs(self) -> int:
+        return (self.one_sided_reads + self.one_sided_writes
+                + self.two_sided_msgs + self.atomics + self.async_msgs)
+
+
+class Sim:
+    """Virtual-time cluster: per-server stats, per-thread clocks (on Thread)."""
+
+    def __init__(self, n_servers: int, cores_per_server: int = 16,
+                 cost: CostModel | None = None):
+        self.n = n_servers
+        self.cores = cores_per_server
+        self.cost = cost or CostModel()
+        self.servers = [ServerStats() for _ in range(n_servers)]
+        self.net = NetStats()
+        # straggler model: per-server compute slowdown (thermal throttling,
+        # noisy neighbours, failing DIMMs...).  1.0 = healthy.
+        self.slowdown = [1.0] * n_servers
+
+    def degrade(self, server: int, factor: float) -> None:
+        self.slowdown[server] = factor
+
+    # ---- thread-charged primitives -------------------------------------
+    def compute(self, th, cycles: float) -> None:
+        us = self.cost.cycles_us(cycles) * self.slowdown[th.server]
+        th.t_us += us
+        self.servers[th.server].cpu_busy_us += us
+
+    def busy(self, th, us: float) -> None:
+        us *= self.slowdown[th.server]
+        th.t_us += us
+        self.servers[th.server].cpu_busy_us += us
+
+    def local_access(self, th, nbytes: int = 0) -> None:
+        # In-memory object access; bandwidth term only for bulk payloads.
+        us = self.cost.local_access_us + (nbytes / 2e4 if nbytes > 4096 else 0.0)
+        th.t_us += us
+        self.servers[th.server].cpu_busy_us += us
+
+    def deref_check(self, th) -> None:
+        self.busy(th, self.cost.deref_check_us)
+
+    def rdma_read(self, th, src_server: int, nbytes: int) -> None:
+        """One-sided READ: no CPU on the remote side."""
+        us = self.cost.one_sided_base_us + self.cost.xfer_us(nbytes)
+        th.t_us += us
+        self.net.one_sided_reads += 1
+        self.net.bytes_moved += nbytes
+        self.net.round_trips += 1
+        self.servers[src_server].bytes_out += nbytes
+        self.servers[th.server].bytes_in += nbytes
+
+    def rdma_write(self, th, dst_server: int, nbytes: int) -> None:
+        us = self.cost.one_sided_base_us + self.cost.xfer_us(nbytes)
+        th.t_us += us
+        self.net.one_sided_writes += 1
+        self.net.bytes_moved += nbytes
+        self.net.round_trips += 1
+        self.servers[dst_server].bytes_in += nbytes
+        self.servers[th.server].bytes_out += nbytes
+
+    def rdma_atomic(self, th, dst_server: int) -> None:
+        th.t_us += self.cost.atomic_verb_us
+        self.net.atomics += 1
+        self.net.round_trips += 1
+
+    def rpc(self, th, dst_server: int, req_bytes: int = 64,
+            resp_bytes: int = 64, proc_us: float | None = None) -> None:
+        """Two-sided request/response; remote CPU does ``proc_us`` of work."""
+        proc = self.cost.msg_proc_us if proc_us is None else proc_us
+        us = (self.cost.two_sided_rtt_us + self.cost.xfer_us(req_bytes + resp_bytes)
+              + proc)
+        th.t_us += us
+        self.net.two_sided_msgs += 2
+        self.net.round_trips += 1
+        self.net.bytes_moved += req_bytes + resp_bytes
+        self.servers[dst_server].cpu_busy_us += proc
+        self.servers[dst_server].msgs += 1
+
+    def async_msg(self, dst_server: int, nbytes: int = 64) -> None:
+        """Off-critical-path message (e.g. async dealloc, lazy invalidation)."""
+        self.net.async_msgs += 1
+        self.net.bytes_moved += nbytes
+        self.servers[dst_server].cpu_busy_us += self.cost.msg_proc_us * 0.5
+        self.servers[dst_server].msgs += 1
+
+    # ---- aggregation ----------------------------------------------------
+    def makespan_us(self, threads) -> float:
+        """App completion time: slowest thread, or a saturated server's CPU."""
+        per_server_thread = [0.0] * self.n
+        for t in threads:
+            per_server_thread[t.server] = max(per_server_thread[t.server], t.t_us)
+        span = 0.0
+        for s in range(self.n):
+            cpu = self.servers[s].cpu_busy_us / self.cores
+            span = max(span, per_server_thread[s], cpu)
+        return span
+
+    def snapshot(self) -> dict:
+        return {
+            "net": dataclasses.asdict(self.net),
+            "servers": [dataclasses.asdict(s) for s in self.servers],
+        }

@@ -1,0 +1,567 @@
+"""DRust's ownership-guided coherence protocol (paper §4.1.1, Appendix B).
+
+Implements, operation-for-operation:
+
+  * Algorithm 4  — immutable-reference Deref / DropRef (cache hashmap H)
+  * Algorithm 6  — mutable-reference DerefMut (move-on-remote-write, pointer
+                   coloring + U bit on local write) / DropMutRef (owner
+                   write-back of the colored address)
+  * Algorithm 7  — owner immutable access (borrow+return pair)
+  * Algorithm 8  — owner mutable access (incl. adopting an existing local
+                   cache copy instead of re-copying)
+  * Algorithm 3/5 — color utilities (see ``addr``), move-on-overflow
+  * Appendix D.1 — stack values / partial borrows (copy + write-back)
+  * Appendix D.2 — reference creation & ownership transfer (cache eviction)
+  * §4.1.3       — TBox affinity groups (batched group fetch/move, check-free
+                   deref) and spawn_to support hooks
+
+Python has no borrow checker, so Rust's *static* guarantees are enforced
+dynamically: every DBox tracks live borrows and raises ``BorrowError`` on
+violations — the tests drive only programs a Rust compiler would accept, and
+the hypothesis suite checks the protocol's coherence lemmas (Appendix C).
+
+Colors are authoritative in *pointers* (exactly as in the paper); the heap
+keeps a mirror (``obj_color``) only so batched TBox group fetches can key
+children cache entries without threading every handle through the runtime —
+the mirror is bookkeeping, not protocol state.
+"""
+
+from __future__ import annotations
+
+import copy as _copy
+from typing import Any, Callable
+
+from . import addr as A
+from .cache import LocalCache
+from .heap import GlobalHeap, Obj
+from .net import Sim
+
+
+class BorrowError(RuntimeError):
+    """A program the Rust borrow checker would have rejected."""
+
+
+def _clone(data: Any) -> Any:
+    try:
+        import numpy as np
+        if isinstance(data, np.ndarray):
+            return data.copy()
+    except Exception:      # pragma: no cover
+        pass
+    if isinstance(data, (bytes, int, float, str, type(None))):
+        return data
+    return _copy.deepcopy(data)
+
+
+class DBox:
+    """Owner pointer (DRust's ``DBox<T>``, re-implemented ``Box``)."""
+
+    __slots__ = ("g", "l", "u", "home", "rt", "live_refs", "live_mut",
+                 "dropped", "tied")
+
+    def __init__(self, rt: "DrustRuntime", g: int, home: int, tied: bool = False):
+        self.rt = rt
+        self.g = g          # colored global address (word 0)
+        self.l = A.NULL     # ext word, read path: local cache copy address
+        self.u = False      # ext word, write path: U bit
+        self.home = home    # server hosting the *pointer* (for write-back cost)
+        self.live_refs = 0
+        self.live_mut = False
+        self.dropped = False
+        self.tied = tied    # this owner is a TBox (affinity-tied to a parent)
+
+    def __repr__(self):
+        return (f"DBox(g={A.clear_color(self.g):#x}c{A.get_color(self.g)}, "
+                f"l={self.l:#x}, u={self.u})")
+
+    # Rust surface: borrows ------------------------------------------------
+    def borrow(self, th) -> "Ref":
+        self._check_live()
+        if self.live_mut:
+            raise BorrowError("immutable borrow while mutable borrow alive")
+        self.live_refs += 1
+        self.u = False                      # B.4: creating & ref resets U
+        return Ref(self.rt, self.g, owner=self)
+
+    def borrow_mut(self, th) -> "MutRef":
+        self._check_live()
+        if self.live_mut or self.live_refs:
+            raise BorrowError("mutable borrow while other borrows alive")
+        self._release_pin()                 # owner's cached copy unpinned
+        self.live_mut = True
+        return MutRef(self.rt, self.g, owner=self, u=self.u)
+
+    def _check_live(self):
+        if self.dropped:
+            raise BorrowError("use after drop")
+
+    def _release_pin(self):
+        if self.l != A.NULL:
+            self.rt.caches[A.server_of(self.l)].dec(self.g)
+            self.l = A.NULL
+
+
+class Ref:
+    """Shared immutable reference (``&T``)."""
+
+    __slots__ = ("rt", "g", "l", "owner", "dropped")
+
+    def __init__(self, rt: "DrustRuntime", g: int, owner: DBox | None):
+        self.rt = rt
+        self.g = g          # colored global address, copied at creation (D.2)
+        self.l = A.NULL     # local copy address (filled on first deref)
+        self.owner = owner
+        self.dropped = False
+
+    def clone(self) -> "Ref":
+        """New ref from a ref: copies only the global address (D.2)."""
+        if self.owner is not None:
+            self.owner.live_refs += 1
+        return Ref(self.rt, self.g, self.owner)
+
+    def deref(self, th) -> Any:
+        """Algorithm 4."""
+        assert not self.dropped
+        rt, sim = self.rt, self.rt.sim
+        sim.deref_check(th)
+        if A.server_of(self.g) == th.server:                 # IsLocal
+            sim.local_access(th)
+            return rt.heap.get(A.clear_color(self.g)).data
+        if self.l == A.NULL:
+            H = rt.caches[th.server]
+            sim.busy(th, sim.cost.hashmap_us)
+            e = H.lookup(self.g)
+            if e is not None:                                # lines 7-10
+                self.l = e.local
+                e.refcount += 1
+            else:                                            # lines 11-13
+                self.l = rt._copy_in(th, self.g)
+                H.insert(self.g, self.l, refcount=1)
+        sim.local_access(th)
+        return rt.heap.get(self.l).data
+
+    def drop(self, th) -> None:
+        """DropRef: release the cache pin."""
+        if self.dropped:
+            return
+        self.dropped = True
+        if self.l != A.NULL:
+            self.rt.caches[th.server].dec(self.g)
+            self.l = A.NULL
+        if self.owner is not None:
+            self.owner.live_refs -= 1
+
+
+class MutRef:
+    """Exclusive mutable reference (``&mut T``)."""
+
+    __slots__ = ("rt", "g", "u", "owner", "dropped", "accessed")
+
+    def __init__(self, rt: "DrustRuntime", g: int, owner: DBox, u: bool):
+        self.rt = rt
+        self.g = g
+        self.u = u          # U bit of the extension word (owner addr | U)
+        self.owner = owner
+        self.dropped = False
+        self.accessed = False
+
+    def deref_mut(self, th) -> Any:
+        """Algorithm 6: returns the payload at a local, writable address."""
+        assert not self.dropped
+        rt, sim = self.rt, self.rt.sim
+        sim.deref_check(th)
+        self.accessed = True
+        if A.server_of(self.g) == th.server:                 # local write
+            if not self.u:                                   # lines 3-6
+                self.u = True
+                g2, overflow = A.bump_color(self.g)
+                if overflow:                                 # move-on-overflow
+                    g2 = A.append_color(rt._move_local(th, self.g), 0)
+                self.g = g2
+                rt._mirror_color(self.g)
+        else:                                                # lines 7-9
+            self.u = True
+            self.g = A.append_color(rt._move_in(th, self.g), A.get_color(self.g))
+            rt._mirror_color(self.g)
+        sim.local_access(th)
+        return rt.heap.get(A.clear_color(self.g)).data
+
+    def set(self, th, data: Any) -> None:
+        obj = self.rt.heap.get(A.clear_color(self.deref_and_addr(th)))
+        obj.data = data
+
+    def deref_and_addr(self, th) -> int:
+        self.deref_mut(th)
+        return A.clear_color(self.g)
+
+    def drop(self, th) -> None:
+        """DropMutRef: WRITE the colored address back into the owner slot."""
+        if self.dropped:
+            return
+        self.dropped = True
+        rt, owner = self.rt, self.owner
+        if owner.home != th.server:
+            rt.sim.rdma_write(th, owner.home, 8)             # one-sided WRITE
+        else:
+            rt.sim.local_access(th)
+        owner.g = self.g
+        owner.u = self.u
+        owner.l = A.NULL       # stale read-path ext cannot survive a new g
+        owner.live_mut = False
+        if self.accessed:
+            rt.on_write_visible(A.clear_color(self.g))       # FT write-back hook
+
+
+class StackRef:
+    """Appendix D.1: mutable borrow of a stack value / struct part.
+
+    The borrowed bytes are *copied* to the borrowing server and written back
+    on drop (the address cannot change); the parent owner's color is bumped
+    atomically so remote caches of the parent miss afterwards.
+    """
+
+    __slots__ = ("rt", "parent", "data", "size", "src_server", "dropped")
+
+    def __init__(self, rt: "DrustRuntime", parent: DBox, data: Any, size: int,
+                 src_server: int):
+        self.rt, self.parent = rt, parent
+        self.data, self.size, self.src_server = data, size, src_server
+        self.dropped = False
+
+    def deref_mut(self, th) -> Any:
+        self.rt.sim.deref_check(th)
+        self.rt.sim.local_access(th)
+        return self.data
+
+    def drop(self, th) -> None:
+        if self.dropped:
+            return
+        self.dropped = True
+        rt = self.rt
+        if th.server != self.src_server:
+            rt.sim.rdma_write(th, self.src_server, self.size)
+        else:
+            rt.sim.local_access(th, self.size)
+        if self.parent is not None:
+            g2, overflow = A.bump_color(self.parent.g)
+            if overflow:
+                g2 = A.append_color(rt._move_local(th, self.parent.g), 0)
+            self.parent.g = g2
+            rt._mirror_color(self.parent.g)
+            self.parent.live_mut = False
+            rt.on_write_visible(A.clear_color(self.parent.g))
+
+
+class DrustRuntime:
+    """Per-cluster protocol engine: heap + caches + the op implementations."""
+
+    def __init__(self, sim: Sim, heap: GlobalHeap | None = None):
+        self.sim = sim
+        self.heap = heap or GlobalHeap(sim.n)
+        self.caches = [LocalCache(s, self.heap.partitions[s])
+                       for s in range(sim.n)]
+        self.owner_of: dict[int, DBox] = {}    # raw addr -> unique owner handle
+        self.obj_color: dict[int, int] = {}    # bookkeeping mirror (see module doc)
+        # fault-tolerance hook; replaced by repro.core.fault.Replicator
+        self.on_write_visible: Callable[[int], None] = lambda raw: None
+        self.on_alloc: Callable[[int], None] = lambda raw: None
+        self.on_free: Callable[[int], None] = lambda raw: None
+        self.on_transfer: Callable[[int], None] = lambda raw: None
+
+    # ---- allocation ------------------------------------------------------
+    def alloc(self, th, size: int, data: Any, server: int | None = None,
+              tie_to: DBox | None = None) -> DBox:
+        """Global allocation (§4.2.1): local-first, controller may redirect.
+
+        ``tie_to`` makes this a TBox allocation: the object is co-located
+        with (and tied to) its owner object's partition.
+        """
+        if tie_to is not None:
+            server = A.server_of(tie_to.g)
+        elif server is None:
+            server = th.server
+        self.sim.busy(th, self.sim.cost.alloc_us)
+        if server != th.server:
+            self.sim.rpc(th, server, req_bytes=64 + (size if data is not None else 0))
+        raw = self.heap.alloc_on(server, size, data)
+        box = DBox(self, A.append_color(raw, 0), home=th.server,
+                   tied=tie_to is not None)
+        self.owner_of[raw] = box
+        self.obj_color[raw] = 0
+        if tie_to is not None:
+            self.heap.get(A.clear_color(tie_to.g)).ties.append(raw)
+        self.on_alloc(raw)
+        th.local_heap_bytes += size if server == th.server else 0
+        return box
+
+    def stack_val(self, th, size: int, data: Any) -> DBox:
+        """A stack value exposed for borrowing (D.1): modeled as an object in
+        the thread's partition that is never moved (address pinned)."""
+        raw = self.heap.alloc_on(th.server, size, data)
+        box = DBox(self, A.append_color(raw, 0), home=th.server)
+        self.owner_of[raw] = box
+        self.obj_color[raw] = 0
+        return box
+
+    # ---- owner direct access (Algorithms 7/8) ----------------------------
+    def owner_read(self, th, box: DBox) -> Any:
+        """Algorithm 7 (a borrow+return pair; resets U per B.4)."""
+        box._check_live()
+        if box.live_mut:
+            raise BorrowError("owner read while mutable borrow alive")
+        sim = self.sim
+        sim.deref_check(th)
+        box.u = False
+        if A.server_of(box.g) == th.server:
+            sim.local_access(th)
+            return self.heap.get(A.clear_color(box.g)).data
+        if box.l == A.NULL:
+            H = self.caches[th.server]
+            sim.busy(th, sim.cost.hashmap_us)
+            e = H.lookup(box.g)
+            if e is not None:
+                box.l = e.local
+                e.refcount += 1
+            else:
+                box.l = self._copy_in(th, box.g)
+                H.insert(box.g, box.l, refcount=1)
+        sim.local_access(th)
+        return self.heap.get(box.l).data
+
+    def owner_write(self, th, box: DBox, fn: Callable[[Any], Any] | None = None,
+                    data: Any = None) -> Any:
+        """Algorithm 8 (incl. adopting an existing local cache copy)."""
+        box._check_live()
+        if box.live_mut or box.live_refs:
+            raise BorrowError("owner write while borrows alive")
+        box._release_pin()
+        sim = self.sim
+        sim.deref_check(th)
+        if A.server_of(box.g) == th.server:
+            if not box.u:                                    # lines 3-6
+                box.u = True
+                g2, overflow = A.bump_color(box.g)
+                if overflow:
+                    g2 = A.append_color(self._move_local(th, box.g), 0)
+                box.g = g2
+                self._mirror_color(box.g)
+        else:
+            H = self.caches[th.server]
+            sim.busy(th, sim.cost.hashmap_us)
+            e = H.lookup(box.g)
+            if e is None:                                    # lines 8-10
+                box.u = True
+                box.g = A.append_color(self._move_in(th, box.g),
+                                       A.get_color(box.g))
+            else:                                            # lines 11-16: adopt
+                H.remove(box.g)
+                old_raw = A.clear_color(box.g)
+                self._dealloc_remote(th, old_raw)
+                new_raw = e.local
+                self.owner_of.pop(old_raw, None)
+                self.owner_of[new_raw] = box
+                self.obj_color[new_raw] = A.get_color(box.g)
+                box.g = A.append_color(new_raw, A.get_color(box.g))
+                box.u = True
+            box.l = A.NULL
+            self._mirror_color(box.g)
+        sim.local_access(th)
+        obj = self.heap.get(A.clear_color(box.g))
+        if fn is not None:
+            obj.data = fn(obj.data)
+        elif data is not None:
+            obj.data = data
+        self.on_write_visible(A.clear_color(box.g))
+        return obj.data
+
+    # ---- drop / transfer ---------------------------------------------------
+    def drop_box(self, th, box: DBox) -> None:
+        """Owner out of scope: recursive drop of tied children, dealloc, and
+        async invalidation of cached copies on every server (B.4)."""
+        if box.dropped:
+            return
+        if box.live_mut or box.live_refs:
+            raise BorrowError("drop while borrows alive")
+        box._release_pin()
+        box.dropped = True
+        raw = A.clear_color(box.g)
+        if not self.heap.contains(raw):
+            return
+        for child in list(self.heap.get(raw).ties):
+            child_box = self.owner_of.get(child)
+            if child_box is not None and not child_box.dropped:
+                self.drop_box(th, child_box)
+        if A.server_of(raw) != th.server:
+            self.sim.async_msg(A.server_of(raw))
+        self.heap.free(raw)
+        self.on_free(raw)
+        self.owner_of.pop(raw, None)
+        self.obj_color.pop(raw, None)
+        self._async_invalidate(raw)
+
+    def transfer(self, th_src, box: DBox, dst_server: int) -> None:
+        """Ownership transfer between threads/servers (D.2): only the pointer
+        moves; the source server's cache copy is deallocated."""
+        if box.live_mut or box.live_refs:
+            raise BorrowError("transfer while borrows alive")
+        if box.l != A.NULL:
+            H = self.caches[A.server_of(box.l)]
+            H.dec(box.g)
+            e = H.entries.get(box.g)
+            if e is not None and e.refcount <= 0:
+                H.remove(box.g)
+                part = self.heap.partitions[A.server_of(box.l)]
+                if part.contains(box.l):
+                    part.free(box.l)
+            box.l = A.NULL
+        self.sim.rpc(th_src, dst_server, req_bytes=16)   # ship the pointer
+        box.home = dst_server
+        # §4.2.3: ownership transfer is the visibility point — flush batched
+        # write-backs for this object to the backup partition now.
+        self.on_transfer(A.clear_color(box.g))
+
+    # ---- internals ---------------------------------------------------------
+    def _group(self, raw: int) -> list[int]:
+        return self.heap.tie_closure(raw)
+
+    def _copy_in(self, th, colored_g: int) -> int:
+        """COPY: fetch object (+ TBox group) into the local cache; returns the
+        local copy address of the root.  One batched one-sided READ."""
+        raw = A.clear_color(colored_g)
+        src = A.server_of(raw)
+        group = self._group(raw)
+        total = sum(self.heap.get(a).size for a in group)
+        self.sim.rdma_read(th, src, total)
+        H = self.caches[th.server]
+        part = self.heap.partitions[th.server]
+        root_local = A.NULL
+        for a in group:
+            obj = self.heap.get(a)
+            local = part.alloc(obj.size, _clone(obj.data))
+            self.sim.busy(th, self.sim.cost.alloc_us)
+            if a == raw:
+                root_local = local
+            else:
+                H.insert(A.append_color(a, self.obj_color.get(a, 0)), local,
+                         refcount=0)
+        return root_local
+
+    def _move_in(self, th, colored_g: int) -> int:
+        """MOVE: relocate object (+ group) into the caller's partition.
+        Copy over the wire, then *async* dealloc at the source; the address
+        change implicitly invalidates every cached copy."""
+        raw = A.clear_color(colored_g)
+        src = A.server_of(raw)
+        group = self._group(raw)
+        total = sum(self.heap.get(a).size for a in group)
+        self.sim.rdma_read(th, src, total)
+        part = self.heap.partitions[th.server]
+        remap: dict[int, int] = {}
+        for a in group:
+            obj = self.heap.get(a)
+            remap[a] = part.alloc(obj.size, obj.data)
+            self.sim.busy(th, self.sim.cost.alloc_us)
+        for a in group:
+            old = self.heap.get(a)
+            new_obj = self.heap.get(remap[a])
+            new_obj.ties = [remap.get(t, t) for t in old.ties]
+        for a in group:
+            self.heap.free(a)
+            self.sim.async_msg(src)                      # async dealloc req
+            self._async_invalidate(a)
+            owner = self.owner_of.pop(a, None)
+            color = self.obj_color.pop(a, 0)
+            self.owner_of[remap[a]] = owner
+            self.obj_color[remap[a]] = color
+            if owner is not None and a != raw:
+                owner.g = A.append_color(remap[a], A.get_color(owner.g))
+        th.local_heap_bytes += total
+        return remap[raw]
+
+    def _move_local(self, th, colored_g: int) -> int:
+        """Move-on-overflow: relocate within the local partition, color→0."""
+        raw = A.clear_color(colored_g)
+        part = self.heap.partitions[th.server]
+        obj = part.get(raw)
+        new_raw = part.alloc(obj.size, obj.data)
+        new_obj = part.get(new_raw)
+        new_obj.ties = list(obj.ties)
+        part.free(raw)
+        owner = self.owner_of.pop(raw, None)
+        self.owner_of[new_raw] = owner
+        self.obj_color.pop(raw, None)
+        self.obj_color[new_raw] = 0
+        self._async_invalidate(raw)
+        self.sim.busy(th, self.sim.cost.alloc_us)
+        return new_raw
+
+    def _dealloc_remote(self, th, raw: int) -> None:
+        src = A.server_of(raw)
+        if self.heap.contains(raw):
+            self.heap.free(raw)
+            self.on_free(raw)
+        self.sim.async_msg(src)
+        self._async_invalidate(raw)
+
+    def _async_invalidate(self, raw: int) -> None:
+        """Dealloc-time cache scrub (B.4) — async, off the critical path."""
+        for s, H in enumerate(self.caches):
+            n = H.invalidate_raw(raw)
+            if n:
+                self.sim.net.invalidations += n
+                self.sim.async_msg(s, 16)
+
+    def _mirror_color(self, colored_g: int) -> None:
+        self.obj_color[A.clear_color(colored_g)] = A.get_color(colored_g)
+
+    # ---- memory pressure (§4.2.1) -------------------------------------------
+    def evict_caches(self, server: int) -> int:
+        return self.caches[server].evict_unreferenced()
+
+    def frac_used(self, server: int) -> float:
+        return self.heap.partitions[server].frac_used
+
+
+class DrustBackend:
+    """Whole-object read/write facade used by the evaluation applications.
+
+    ``read`` = immutable borrow + deref + drop; ``write``/``update`` =
+    mutable borrow + deref_mut + drop (write-back).  This mirrors how the
+    paper hooks pointer dereferences.
+    """
+
+    name = "drust"
+
+    def __init__(self, rt: DrustRuntime):
+        self.rt = rt
+
+    def alloc(self, th, size: int, data: Any = None, server: int | None = None,
+              tie_to: DBox | None = None) -> DBox:
+        return self.rt.alloc(th, size, data, server=server, tie_to=tie_to)
+
+    def read(self, th, box: DBox) -> Any:
+        r = box.borrow(th)
+        val = r.deref(th)
+        r.drop(th)
+        return val
+
+    def read_cached(self, th, box: DBox) -> tuple[Any, Ref]:
+        """Long-lived immutable borrow (caller drops)."""
+        r = box.borrow(th)
+        return r.deref(th), r
+
+    def write(self, th, box: DBox, data: Any) -> None:
+        m = box.borrow_mut(th)
+        m.deref_mut(th)
+        self.rt.heap.get(A.clear_color(m.g)).data = data
+        m.drop(th)
+
+    def update(self, th, box: DBox, fn: Callable[[Any], Any]) -> Any:
+        m = box.borrow_mut(th)
+        val = fn(m.deref_mut(th))
+        self.rt.heap.get(A.clear_color(m.g)).data = val
+        m.drop(th)
+        return val
+
+    def free(self, th, box: DBox) -> None:
+        self.rt.drop_box(th, box)

@@ -1,0 +1,262 @@
+"""DRust runtime system (§4.2): threads, cooperative scheduler, controller.
+
+* ``Thread`` — a user-space green thread with a private (globally aligned)
+  stack address range, its own virtual clock, and the access statistics the
+  controller's balancing policies need.
+* ``Scheduler`` — spawn / spawn_to / join / migrate.  Context switches are
+  function calls (cooperative, non-preemptive); migration ships the function
+  pointer + saved registers + stack, which keeps its address (Fig. 3).
+* ``GlobalController`` — daemon on the launch server: probes per-server
+  CPU/memory, picks allocation & spawn targets, and resolves imbalance by
+  migrating threads (§4.2.2 policies: mem>90% → evict the biggest-heap
+  thread; cpu>90% → move remote-heavy threads toward their data).
+* ``Cluster`` — wires Sim + GlobalHeap + one protocol backend together; the
+  single entry point used by the applications and benchmarks.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from . import addr as A
+from .baselines import GamBackend, GrappaBackend
+from .heap import GlobalHeap
+from .net import CostModel, Sim
+from .ownership import DrustBackend, DrustRuntime
+
+
+class Thread:
+    _ids = itertools.count()
+
+    def __init__(self, server: int, fn: Callable | None = None,
+                 args: tuple = (), stack_bytes: int = 1 << 20):
+        self.tid = next(Thread._ids)
+        self.server = server
+        self.fn, self.args = fn, args
+        self.stack_addr = A.STACK_BASE + self.tid * A.STACK_SIZE
+        self.stack_bytes = stack_bytes          # live stack payload (for migration)
+        self.t_us = 0.0                          # virtual clock
+        self.local_heap_bytes = 0                # controller: mem policy input
+        self.remote_accesses: Counter = Counter()  # server -> count (cpu policy)
+        self.migrations = 0
+        self.done = False
+        self.result: Any = None
+
+    def note_remote(self, server: int) -> None:
+        self.remote_accesses[server] += 1
+
+    def hottest_remote(self) -> int | None:
+        if not self.remote_accesses:
+            return None
+        return self.remote_accesses.most_common(1)[0][0]
+
+
+class Scheduler:
+    """Cooperative user-space scheduler + migration (§4.2.1)."""
+
+    def __init__(self, cluster: "Cluster"):
+        self.cluster = cluster
+        self.threads: list[Thread] = []
+        self.migration_log: list[tuple[int, int, int, float]] = []
+
+    def spawn(self, fn: Callable, *args, server: int | None = None,
+              parent: Thread | None = None) -> Thread:
+        if server is None:
+            server = self.cluster.controller.pick_spawn_server()
+        th = Thread(server, fn, args)
+        self.threads.append(th)
+        if parent is not None:
+            # closure + captured pointers ship to the target server
+            if parent.server != server:
+                self.cluster.sim.rpc(parent, server, req_bytes=256)
+            th.t_us = max(th.t_us, parent.t_us)
+        return th
+
+    def spawn_to(self, box, fn: Callable, *args,
+                 parent: Thread | None = None) -> Thread:
+        """Data-affinity spawn (§4.1.3): run where ``box``'s object lives."""
+        server = A.server_of(box.g if hasattr(box, "g") else box.raw)
+        return self.spawn(fn, *args, server=server, parent=parent)
+
+    def run(self, th: Thread) -> Any:
+        th.result = th.fn(th, *th.args)
+        th.done = True
+        return th.result
+
+    def run_all(self) -> None:
+        for th in self.threads:
+            if not th.done and th.fn is not None:
+                self.run(th)
+
+    def join(self, th: Thread, waiter: Thread | None = None) -> Any:
+        if not th.done and th.fn is not None:
+            self.run(th)
+        if waiter is not None:
+            waiter.t_us = max(waiter.t_us, th.t_us)
+        return th.result
+
+    def migrate(self, th: Thread, dst: int) -> float:
+        """Ship fn pointer + registers + stack; stack address is preserved
+        because stack ranges are globally aligned (Fig. 3).  Returns the
+        migration latency in us (paper measures ~218 us for ~1 MiB stacks)."""
+        sim = self.cluster.sim
+        src = th.server
+        if src == dst:
+            return 0.0
+        lat = (sim.cost.two_sided_rtt_us * 2                    # ctrl handshake
+               + sim.cost.xfer_us(th.stack_bytes + 512)         # stack + regs
+               + sim.cost.msg_proc_us * 2)
+        th.t_us += lat
+        sim.net.two_sided_msgs += 4
+        sim.net.bytes_moved += th.stack_bytes + 512
+        sim.servers[dst].cpu_busy_us += sim.cost.msg_proc_us
+        th.server = dst
+        th.migrations += 1
+        th.local_heap_bytes = 0
+        self.migration_log.append((th.tid, src, dst, lat))
+        self.cluster.controller.thread_table[th.tid] = dst
+        return lat
+
+
+class GlobalController:
+    """Cluster-wise resource daemon (§4.2.2)."""
+
+    MEM_HI = 0.90
+    CPU_HI = 0.90
+
+    def __init__(self, cluster: "Cluster"):
+        self.cluster = cluster
+        self.thread_table: dict[int, int] = {}     # tid -> server
+        self._rr = 0
+
+    # -- probing ----------------------------------------------------------
+    def mem_frac(self, s: int) -> float:
+        return self.cluster.heap.partitions[s].frac_used
+
+    def cpu_frac(self, s: int, horizon_us: float) -> float:
+        if horizon_us <= 0:
+            return 0.0
+        sim = self.cluster.sim
+        return sim.servers[s].cpu_busy_us / (sim.cores * horizon_us)
+
+    # -- placement policies -------------------------------------------------
+    def pick_alloc_server(self, prefer: int, size: int) -> int:
+        """Local-first; under pressure, the most vacant server (§4.2.1)."""
+        part = self.cluster.heap.partitions[prefer]
+        if (part.used + size) / part.capacity < self.MEM_HI:
+            return prefer
+        return min(range(self.cluster.sim.n), key=self.mem_frac)
+
+    def pick_spawn_server(self) -> int:
+        """Least-loaded by CPU busy; round-robin tiebreak."""
+        sim = self.cluster.sim
+        lo = min(s.cpu_busy_us for s in sim.servers)
+        cands = [i for i, s in enumerate(sim.servers) if s.cpu_busy_us == lo]
+        self._rr += 1
+        return cands[self._rr % len(cands)]
+
+    # -- straggler mitigation --------------------------------------------
+    STRAGGLER_FACTOR = 2.0
+
+    def detect_stragglers(self) -> list[int]:
+        """Servers whose observed compute rate lags the fleet median by
+        more than STRAGGLER_FACTOR (the controller's periodic probe)."""
+        slow = self.cluster.sim.slowdown
+        med = sorted(slow)[len(slow) // 2]
+        return [s for s, f in enumerate(slow)
+                if f > med * self.STRAGGLER_FACTOR]
+
+    def mitigate_stragglers(self) -> int:
+        """Drain threads off straggling servers onto the fastest peers —
+        the work-conserving answer while the node is replaced (its heap
+        partition stays readable; only compute moves)."""
+        moved = 0
+        stragglers = set(self.detect_stragglers())
+        if not stragglers:
+            return 0
+        healthy = [s for s in range(self.cluster.sim.n)
+                   if s not in stragglers]
+        if not healthy:
+            return 0
+        for t in list(self.cluster.scheduler.threads):
+            if not t.done and t.server in stragglers:
+                dst = min(healthy,
+                          key=lambda s: self.cluster.sim.servers[s].cpu_busy_us)
+                self.cluster.scheduler.migrate(t, dst)
+                moved += 1
+        return moved
+
+    # -- balancing ----------------------------------------------------------
+    def balance(self, horizon_us: float) -> int:
+        """One balancing round; returns number of migrations performed."""
+        cl, moved = self.cluster, 0
+        threads = [t for t in cl.scheduler.threads if not t.done]
+        for s in range(cl.sim.n):
+            if self.mem_frac(s) > self.MEM_HI:
+                cl.backend_drust and cl.drust.evict_caches(s)
+                victims = sorted((t for t in threads if t.server == s),
+                                 key=lambda t: -t.local_heap_bytes)
+                if victims and self.mem_frac(s) > self.MEM_HI:
+                    dst = min(range(cl.sim.n), key=self.mem_frac)
+                    if dst != s:
+                        cl.scheduler.migrate(victims[0], dst)
+                        moved += 1
+            if self.cpu_frac(s, horizon_us) > self.CPU_HI:
+                remote_heavy = sorted(
+                    (t for t in threads if t.server == s and t.remote_accesses),
+                    key=lambda t: -sum(t.remote_accesses.values()))
+                for t in remote_heavy[:1]:
+                    dst = t.hottest_remote()
+                    if dst is None:
+                        continue
+                    if self.cpu_frac(dst, horizon_us) > self.CPU_HI:
+                        dst = min(range(cl.sim.n),
+                                  key=lambda x: self.cpu_frac(x, horizon_us))
+                    if dst != s:
+                        cl.scheduler.migrate(t, dst)
+                        moved += 1
+        return moved
+
+
+class Cluster:
+    """One simulated deployment: N servers, one protocol backend."""
+
+    def __init__(self, n_servers: int, backend: str = "drust",
+                 cores_per_server: int = 16, cost: CostModel | None = None,
+                 partition_bytes: int | None = None, replicate: bool = False):
+        self.sim = Sim(n_servers, cores_per_server, cost)
+        self.heap = GlobalHeap(n_servers, partition_bytes)
+        self.backend_name = backend
+        self.backend_drust = backend == "drust"
+        if backend == "drust":
+            self.drust = DrustRuntime(self.sim, self.heap)
+            self.backend = DrustBackend(self.drust)
+        elif backend == "gam":
+            self.backend = GamBackend(self.sim, self.heap)
+        elif backend == "grappa":
+            self.backend = GrappaBackend(self.sim, self.heap)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        self.scheduler = Scheduler(self)
+        self.controller = GlobalController(self)
+        self.replicator = None
+        if replicate and backend == "drust":
+            from .fault import Replicator
+            self.replicator = Replicator(self)
+
+    # convenience ---------------------------------------------------------
+    def main_thread(self, server: int = 0) -> Thread:
+        th = Thread(server)
+        self.scheduler.threads.append(th)
+        return th
+
+    def makespan_us(self) -> float:
+        return self.sim.makespan_us(self.scheduler.threads)
+
+    def throughput(self, n_ops: int) -> float:
+        """ops/sec given the virtual makespan."""
+        span = self.makespan_us()
+        return n_ops / (span / 1e6) if span > 0 else float("inf")

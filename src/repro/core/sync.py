@@ -1,0 +1,125 @@
+"""Distributed shared-state primitives (§4.1.2): DAtomic and DMutex.
+
+Shared state cannot be type-checked by the ownership model, so DRust stores
+the actual value on the global heap (only a Box pointer inside the Arc'd
+struct) and serializes every operation at the value's home server:
+
+* DRust uses **one-sided RDMA atomics** (FAA/CAS) — no remote CPU.
+* GAM's mutexes ride its two-sided message path (the paper's explanation of
+  the KV-store gap).
+* Grappa delegates, as always.
+
+Contention is modeled through the home server's CPU/verb accounting plus a
+per-primitive serialization clock: an acquire cannot complete before the
+previous critical section on the same mutex has released (virtual time).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from . import addr as A
+
+
+class DAtomic:
+    """Atomic cell; value lives at its home partition."""
+
+    def __init__(self, cluster, th, init: Any = 0):
+        self.cluster = cluster
+        self.backend = cluster.backend
+        self.h = self.backend.alloc(th, 8, init)
+        self.home = A.server_of(self.h.g if hasattr(self.h, "g") else self.h.raw)
+
+    def _verb(self, th) -> None:
+        sim = self.cluster.sim
+        if th.server == self.home:
+            sim.local_access(th)
+            return
+        name = self.cluster.backend_name
+        if name == "drust":
+            sim.rdma_atomic(th, self.home)               # one-sided FAA/CAS
+        elif name == "gam":
+            sim.rpc(th, self.home, proc_us=sim.cost.msg_proc_us)
+        else:
+            sim.rpc(th, self.home, proc_us=sim.cost.delegation_proc_us)
+
+    def _obj(self):
+        raw = A.clear_color(self.h.g) if hasattr(self.h, "g") else self.h.raw
+        return self.cluster.heap.get(raw)
+
+    def fetch_add(self, th, delta: Any = 1) -> Any:
+        self._verb(th)
+        obj = self._obj()
+        old = obj.data
+        obj.data = old + delta
+        return old
+
+    def load(self, th) -> Any:
+        self._verb(th)
+        return self._obj().data
+
+    def store(self, th, value: Any) -> None:
+        self._verb(th)
+        self._obj().data = value
+
+    def cas(self, th, expect: Any, new: Any) -> bool:
+        self._verb(th)
+        obj = self._obj()
+        if obj.data == expect:
+            obj.data = new
+            return True
+        return False
+
+
+class DMutex:
+    """Mutex whose metadata + owned object live on the global heap."""
+
+    def __init__(self, cluster, th, value: Any = None, size: int = 64):
+        self.cluster = cluster
+        self.backend = cluster.backend
+        self.h = self.backend.alloc(th, size, value)
+        self.home = A.server_of(self.h.g if hasattr(self.h, "g") else self.h.raw)
+        self._release_t = 0.0          # serialization clock (virtual time)
+        self.acquisitions = 0
+        self.contended = 0
+
+    def _lock_verb(self, th) -> None:
+        sim = self.cluster.sim
+        name = self.cluster.backend_name
+        if th.server == self.home:
+            sim.local_access(th)
+        elif name == "drust":
+            sim.rdma_atomic(th, self.home)               # CAS acquire
+        elif name == "gam":
+            sim.rpc(th, self.home, proc_us=sim.cost.msg_proc_us)
+        else:
+            sim.rpc(th, self.home, proc_us=sim.cost.delegation_proc_us)
+
+    def with_lock(self, th, fn: Callable[[Any], Any]) -> Any:
+        """Acquire, run the critical section at the caller, release.
+
+        Only the critical section itself serializes; the acquire/release
+        verbs overlap with other holders' sections (lock hand-off latency is
+        hidden by the queue, as with MCS-style RDMA locks)."""
+        self._lock_verb(th)
+        self.acquisitions += 1
+        if th.t_us < self._release_t:                    # wait for holder
+            self.contended += 1
+            th.t_us = self._release_t
+        raw = A.clear_color(self.h.g) if hasattr(self.h, "g") else self.h.raw
+        obj = self.cluster.heap.get(raw)
+        out = fn(obj)
+        self._release_t = th.t_us                        # section end
+        # Release: DRust posts a one-sided WRITE (fire-and-forget unlock);
+        # GAM posts its release message without waiting for the ack; Grappa's
+        # delegated unlock is a blocking global-memory op.
+        name = self.cluster.backend_name
+        if th.server == self.home:
+            self.cluster.sim.local_access(th)
+        elif name == "drust":
+            self.cluster.sim.net.one_sided_writes += 1
+        elif name == "gam":
+            self.cluster.sim.async_msg(self.home)
+        else:
+            self._lock_verb(th)
+        return out

@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for every kernel.
+
+On TPU the Pallas kernels compile natively; elsewhere ``interpret=True``
+executes the same blocked dataflow in Python (correctness validation — the
+per-kernel tests sweep shapes/dtypes against the ``ref`` oracles).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .decode_attention import decode_attention as _decode
+from .flash_attention import flash_attention as _flash
+from .moe_gmm import moe_gmm as _gmm
+from .rglru_scan import rglru_scan as _rglru
+from .rwkv_scan import rwkv_scan as _rwkv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512):
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k, v, lengths, block_k: int = 512):
+    return _decode(q, k, v, lengths, block_k=block_k,
+                   interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_c", "block_f", "block_d"))
+def moe_gmm(x, w, block_c: int = 256, block_f: int = 256, block_d: int = 512):
+    return _gmm(x, w, block_c=block_c, block_f=block_f, block_d=block_d,
+                interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv_scan(r, k, v, logw, u, chunk: int = 128):
+    return _rwkv(r, k, v, logw, u, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d"))
+def rglru_scan(a, b, chunk: int = 256, block_d: int = 512):
+    return _rglru(a, b, chunk=chunk, block_d=block_d,
+                  interpret=_interpret())

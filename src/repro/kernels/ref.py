@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True):
+    """q: (B,H,T,hd); k,v: (B,Hkv,S,hd) -> (B,H,T,hd)."""
+    B, H, T, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, T, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgth,bksh->bkgts", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((T, S), bool), k=S - T)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bksh->bkgth", p, v.astype(jnp.float32))
+    return o.reshape(B, H, T, hd).astype(q.dtype)
+
+
+def decode_attention(q, k, v, lengths):
+    """q: (B,H,hd); k,v: (B,Hkv,S,hd); lengths: (B,) -> (B,H,hd)."""
+    B, H, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, k.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def moe_gmm(x, w):
+    """x: (E,C,D); w: (E,D,F) -> (E,C,F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv_scan(r, k, v, logw, u):
+    """Naive per-step WKV6: the definitional recurrence.
+    r,k,v,logw: (B,H,T,M); u: (H,M) -> (o (B,H,T,M) f32, S (B,H,M,M) f32)."""
+    B, H, T, M = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = jnp.exp(logw.astype(jnp.float32))
+
+    def step(S, t):
+        kv = jnp.einsum("bhm,bhn->bhmn", kf[:, :, t], vf[:, :, t])
+        o = jnp.einsum("bhm,bhmn->bhn", rf[:, :, t],
+                       S + u[None, :, :, None] * kv)
+        S = w[:, :, t][..., None] * S + kv
+        return S, o
+
+    S0 = jnp.zeros((B, H, M, M), jnp.float32)
+    S, os = jax.lax.scan(step, S0, jnp.arange(T))
+    return os.transpose(1, 2, 0, 3), S
+
+
+def rglru_scan(a, b):
+    """Naive h_t = a_t h_{t-1} + b_t.  a, b: (B,T,D) -> (B,T,D) f32."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def step(h, t):
+        h = af[:, t] * h + bf[:, t]
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, jnp.arange(a.shape[1]))
+    return hs.transpose(1, 0, 2)

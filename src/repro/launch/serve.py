@@ -1,0 +1,73 @@
+"""Serving driver: batched decode with the ownership-paged KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        [--requests 12] [--slots 4] [--max-new 16] [--refresh-every 8]
+
+Demonstrates the paper's coherence protocol in the serving path:
+  * shared prompt prefixes are immutably-borrowed pages (refcounted);
+  * each decode step appends under a mutable borrow (color bump);
+  * weight refresh is a colored-cache fetch: a writer (simulated online
+    trainer) bumps the weights' color and every replica refetches lazily —
+    zero invalidation messages.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--refresh-every", type=int, default=0,
+                    help="bump weight color every N engine steps "
+                    "(simulated online trainer)")
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.core.jaxstate import OwnedState
+    from repro.models import init_params
+    from repro.serve import ServeEngine
+
+    cfg = configs.smoke(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    weights = OwnedState("weights", params)
+    engine = ServeEngine(cfg, weights, slots=args.slots, max_len=256)
+
+    rng = np.random.default_rng(0)
+    shared_prefix = list(rng.integers(0, cfg.vocab, size=cfg.attn_chunk))
+    reqs = []
+    for i in range(args.requests):
+        # half the requests share a prompt prefix (page-level sharing)
+        prompt = shared_prefix + list(rng.integers(0, cfg.vocab, size=8)) \
+            if i % 2 == 0 else list(rng.integers(0, cfg.vocab, size=12))
+        reqs.append(engine.submit(prompt, max_new=args.max_new))
+
+    step = 0
+    while engine.queue or engine.active:
+        engine.step()
+        step += 1
+        if args.refresh_every and step % args.refresh_every == 0:
+            with weights.borrow_mut() as ref:      # online weight update
+                ref.set(ref.deref_mut())
+        if step > 10_000:
+            raise RuntimeError("engine did not drain")
+
+    done = sum(1 for r in reqs if r.done)
+    st = engine.stats()
+    print(f"served {done}/{len(reqs)} requests in {st['steps']} steps")
+    print(f"kv pages: {st['kv']}")
+    print(f"weight refreshes: {st['weight_refreshes']} "
+          f"(hits {st['weight_hits']}) — zero invalidation messages")
+    assert done == len(reqs)
+    return st
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Model zoo: the 10 assigned architectures as composable pure-JAX modules.
+
+Families: dense decoder (GQA/MQA/qk-norm/GeGLU variants), MoE (top-k, with
+optional dense residual), RWKV6 (attention-free SSM), RG-LRU hybrid
+(recurrent + local attention), and VLM/audio backbones with stub frontends.
+"""
+
+from .config import ModelConfig
+from .model import (build_batch_spec, decode_step, forward, init_cache,
+                    init_params, loss_fn)
+
+__all__ = ["ModelConfig", "build_batch_spec", "decode_step", "forward",
+           "init_cache", "init_params", "loss_fn"]

@@ -1,0 +1,85 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(W_a x_t)            (recurrence gate)
+    i_t = sigmoid(W_x x_t)            (input gate)
+    a_t = exp(-c · softplus(Lambda) · r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+The diagonal linear recurrence is evaluated with an associative scan
+(log-depth, numerically safe — no explicit cumprod).  The block follows the
+Griffin layout: input/gate linear pair, short causal depthwise conv on the
+input branch, RG-LRU, GeLU-gated output projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+C_CONST = 8.0
+CONV_W = 4
+
+
+def rglru_params(cfg: ModelConfig, key, dtype):
+    d, dl = cfg.d_model, cfg.lru_d
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_in": jax.random.normal(ks[0], (d, dl), dtype) * s,
+        "w_gate": jax.random.normal(ks[1], (d, dl), dtype) * s,
+        "conv": jax.random.normal(ks[2], (CONV_W, dl), dtype) * 0.3,
+        "wa": jax.random.normal(ks[3], (dl, dl), dtype) * dl ** -0.5,
+        "wx": jax.random.normal(ks[4], (dl, dl), dtype) * dl ** -0.5,
+        "lam": jax.random.normal(jax.random.fold_in(key, 7), (dl,),
+                                 jnp.float32) * 0.5 + 2.0,
+        "w_out": jax.random.normal(ks[5], (dl, d), dtype) * dl ** -0.5,
+    }
+
+
+def _causal_conv(x, w, state):
+    """Depthwise causal conv, width CONV_W.  state: (B, CONV_W-1, dl)."""
+    hist = jnp.concatenate([state, x], axis=1) if state is not None else \
+        jnp.pad(x, [(0, 0), (CONV_W - 1, 0), (0, 0)])
+    out = sum(hist[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(CONV_W))
+    new_state = hist[:, -(CONV_W - 1):, :]
+    return out, new_state
+
+
+def rglru_block(cfg: ModelConfig, p, x, state=None):
+    """x: (B,T,D).  state: {"h": (B,dl), "conv": (B,3,dl)} or None."""
+    B, T, D = x.shape
+    u = x @ p["w_in"]                                      # (B,T,dl)
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u, conv_state = _causal_conv(u, p["conv"],
+                                 None if state is None else state["conv"])
+
+    r = jax.nn.sigmoid(u @ p["wa"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ p["wx"]).astype(jnp.float32)
+    log_a = -C_CONST * jax.nn.softplus(p["lam"])[None, None, :] * r  # ≤ 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * u.astype(jnp.float32)
+
+    h0 = state["h"].astype(jnp.float32) if state is not None else \
+        jnp.zeros((B, p["w_in"].shape[1]), jnp.float32)
+    if T == 1:                                             # decode fast path
+        h = a[:, 0] * h0 + b[:, 0]
+        hs = h[:, None, :]
+    else:
+        # fold h0 into the first step, then associative scan over T
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = hs[:, -1, :]
+
+    y = (hs.astype(x.dtype) * gate) @ p["w_out"]
+    new_state = {"h": h, "conv": conv_state}
+    return y, new_state

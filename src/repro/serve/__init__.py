@@ -1,0 +1,6 @@
+from .kvcache import PagedKVCache, Page
+from .serve_step import make_serve_step, make_prefill
+from .engine import ServeEngine, Request
+
+__all__ = ["Page", "PagedKVCache", "Request", "ServeEngine",
+           "make_prefill", "make_serve_step"]

@@ -1,0 +1,107 @@
+"""Batched serving engine: continuous batching over a fixed slot set, with
+the ownership-paged host cache for prefix sharing and weight refresh through
+the colored StateCache (zero-communication when the color matches).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.jaxstate import OwnedState, StateCache
+from repro.models import init_cache
+from repro.models.config import ModelConfig
+from .kvcache import PagedKVCache
+from .serve_step import make_serve_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    generated: list[int] = field(default_factory=list)
+    done: bool = False
+    pages: list = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, weights: OwnedState, slots: int = 4,
+                 max_len: int | None = None, mesh=None):
+        self.cfg = cfg
+        self.weights = weights
+        self.slots = slots
+        self.max_len = max_len or cfg.max_target_len
+        self.mesh = mesh
+        self.weight_cache = StateCache()            # colored read cache
+        self.kv = PagedKVCache(page_size=cfg.attn_chunk)
+        self._step = jax.jit(make_serve_step(cfg, mesh=mesh),
+                             donate_argnums=(1,))
+        self.cache = init_cache(cfg, slots, self.max_len)
+        self.active: dict[int, Request] = {}        # slot -> request
+        self.queue: list[Request] = []
+        self.steps = 0
+        self._rid = itertools.count()
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, prompt: list[int], max_new: int = 16) -> Request:
+        req = Request(next(self._rid), list(prompt), max_new)
+        self.queue.append(req)
+        return req
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            # prefix sharing: reuse sealed pages for the prompt's full pages
+            ps = self.kv.page_size
+            for i in range(0, max(0, len(req.prompt) - ps + 1), ps):
+                page = self.kv.lookup_prefix(tuple(req.prompt[i:i + ps]))
+                if page is None:
+                    page = self.kv.alloc_page(tuple(req.prompt[i:i + ps]))
+                    self.kv.seal(page)
+                req.pages.append(self.kv.borrow(page))
+            self.active[slot] = req
+
+    # -- one decode tick across all active slots ------------------------------
+    def step(self) -> int:
+        self._admit()
+        if not self.active:
+            return 0
+        params = self.weight_cache.fetch(self.weights)  # color-keyed refresh
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for slot, req in self.active.items():
+            seq = req.prompt + req.generated
+            tokens[slot, 0] = seq[-1]
+        nxt, self.cache = self._step(params, self.cache, jnp.asarray(tokens))
+        nxt = np.asarray(nxt)
+        finished = []
+        for slot, req in self.active.items():
+            req.generated.append(int(nxt[slot, 0]))
+            if len(req.generated) >= req.max_new:
+                req.done = True
+                finished.append(slot)
+        for slot in finished:
+            req = self.active.pop(slot)
+            for page in req.pages:
+                self.kv.drop(page)
+        self.steps += 1
+        return len(self.active) + len(finished)
+
+    def run(self, max_steps: int = 256) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and not self.active:
+                break
+            self.step()
+        return done
+
+    def stats(self) -> dict:
+        return {"steps": self.steps, "kv": self.kv.stats(),
+                "weight_refreshes": self.weight_cache.refreshes,
+                "weight_hits": self.weight_cache.hits}

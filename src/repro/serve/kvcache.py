@@ -1,0 +1,141 @@
+"""Ownership-paged KV cache: DRust's protocol applied to serving state.
+
+Pages are heap objects under the ownership model:
+
+  * The request that *appends* to a page holds the mutable borrow — local
+    write, color bump on drop (Algorithm 6).  No other request can read a
+    page mid-append, by construction.
+  * Shared prefix pages are immutably borrowed by many requests; the cache
+    hashmap (token-hash -> page) is keyed by *colored* page addresses, so a
+    recomputed/edited prefix never aliases a stale page (Stale-Value-
+    Elimination, Appendix C.4).
+  * Refcounts drive lazy reclamation under memory pressure (§4.2.1): pages
+    with zero refs are evictable, LRU-ordered.
+
+This is the host-side control plane; the device-side cache is the model's
+slot-contiguous KV buffer (dist.sharding shards its sequence dim over
+`model`).  Page size = attn_chunk so page boundaries align with kernel
+blocks.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+from repro.core.jaxstate import ColoredAddr
+from repro.core.ownership import BorrowError
+
+
+@dataclass
+class Page:
+    addr: ColoredAddr
+    tokens: tuple[int, ...]            # token ids covered by this page
+    refcount: int = 0
+    mut_borrowed: bool = False
+    last_use: int = 0
+
+    @property
+    def full(self) -> bool:
+        return False                    # set by owner cache (page_size)
+
+
+class PagedKVCache:
+    """Page table + prefix-sharing index for one model replica."""
+
+    _uid = itertools.count()
+
+    def __init__(self, page_size: int = 1024, capacity_pages: int = 4096):
+        self.page_size = page_size
+        self.capacity = capacity_pages
+        self.pages: dict[str, Page] = {}          # addr.name -> Page
+        self.prefix_index: dict[tuple, str] = {}  # token tuple -> addr.name
+        self.clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- allocation / append (mutable path) --------------------------------
+    def alloc_page(self, tokens: tuple[int, ...]) -> Page:
+        if len(self.pages) >= self.capacity:
+            freed = self.evict(1)
+            if not freed:
+                raise MemoryError("KV cache full and no evictable pages")
+        addr = ColoredAddr(f"page#{next(self._uid)}", 0)
+        page = Page(addr, tuple(tokens))
+        self.pages[addr.name] = page
+        return page
+
+    def append(self, page: Page, token: int) -> Page:
+        """Mutable borrow: exclusive append; color bump on drop."""
+        if page.refcount > 1:
+            raise BorrowError("append to a shared page requires copy-on-write")
+        if page.mut_borrowed:
+            raise BorrowError("page already mutably borrowed")
+        page.mut_borrowed = True
+        page.tokens = page.tokens + (token,)
+        page.addr = page.addr.bumped()             # the invalidation
+        page.mut_borrowed = False
+        self.touch(page)
+        return page
+
+    def seal(self, page: Page) -> None:
+        """A full page becomes immutable and enters the prefix index."""
+        self.prefix_index[page.tokens] = page.addr.name
+
+    def fork(self, page: Page) -> Page:
+        """Copy-on-write: a shared page that must diverge is *moved* to a new
+        address for the writer (Algorithm 6 move-on-write)."""
+        new = self.alloc_page(page.tokens)
+        return new
+
+    # -- prefix sharing (immutable path) -------------------------------------
+    def lookup_prefix(self, tokens: tuple[int, ...]) -> Page | None:
+        name = self.prefix_index.get(tuple(tokens))
+        if name is None:
+            self.misses += 1
+            return None
+        page = self.pages.get(name)
+        if page is None:
+            self.misses += 1
+            del self.prefix_index[tuple(tokens)]
+            return None
+        self.hits += 1
+        return page
+
+    def borrow(self, page: Page) -> Page:
+        if page.mut_borrowed:
+            raise BorrowError("read during append epoch")
+        page.refcount += 1
+        self.touch(page)
+        return page
+
+    def drop(self, page: Page) -> None:
+        page.refcount = max(0, page.refcount - 1)
+
+    def touch(self, page: Page) -> None:
+        self.clock += 1
+        page.last_use = self.clock
+
+    # -- reclamation ----------------------------------------------------------
+    def evict(self, n: int = 1) -> int:
+        """Lazy zero-refcount reclamation, LRU first (§4.2.1)."""
+        victims = sorted(
+            (p for p in self.pages.values() if p.refcount == 0
+             and not p.mut_borrowed),
+            key=lambda p: p.last_use)[:n]
+        for p in victims:
+            self.pages.pop(p.addr.name, None)
+            self.prefix_index.pop(p.tokens, None)
+            self.evictions += 1
+        return len(victims)
+
+    @property
+    def bytes_estimate(self) -> int:
+        return len(self.pages) * self.page_size
+
+    def stats(self) -> dict:
+        return {"pages": len(self.pages), "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "shared": sum(1 for p in self.pages.values()
+                              if p.refcount > 1)}

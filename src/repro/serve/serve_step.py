@@ -1,0 +1,34 @@
+"""Compiled serving steps: batched greedy decode + prefill."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward
+from repro.models.config import ModelConfig
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None):
+    """serve_step(params, cache, tokens (B,1)) -> (next_tokens, cache).
+
+    The cache is donated by the engine's jit wrapper: the decode append is a
+    mutable borrow of the owner's buffer (local write + color bump — no
+    invalidation of any replica)."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = decode_step(cfg, params, cache, tokens, mesh=mesh)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, mesh=None):
+    """prefill(params, batch) -> (last_logits, per-position logits)."""
+
+    def prefill(params, batch):
+        logits, _ = forward(cfg, params, batch, mesh=mesh)
+        return logits[:, -1, :], logits
+
+    return prefill

@@ -1,0 +1,48 @@
+"""Colored-address and pointer-layout unit tests (paper Fig. 4/8)."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import addr as A
+
+
+def test_color_roundtrip():
+    g = A.append_color(0x1234, 7)
+    assert A.get_color(g) == 7
+    assert A.clear_color(g) == 0x1234
+
+
+def test_bump_and_overflow():
+    g = A.append_color(42, A.MAX_COLOR - 1)
+    g2, ov = A.bump_color(g)
+    assert not ov and A.get_color(g2) == A.MAX_COLOR
+    g3, ov = A.bump_color(g2)
+    assert ov and A.get_color(g3) == 0      # move-on-overflow resets
+
+
+def test_u_bit():
+    ext = 0xdeadbeef
+    assert not A.color_updated(ext)
+    ext = A.set_u_bit(ext)
+    assert A.color_updated(ext)
+    assert A.clear_u_bit(ext) == 0xdeadbeef
+
+
+def test_server_of_partitions():
+    for s in range(8):
+        base, limit = A.partition_range(s)
+        assert A.server_of(base) == s
+        assert A.server_of(limit - 1) == s
+
+
+def test_stack_addresses_have_no_home():
+    assert A.is_stack(A.STACK_BASE + 100)
+    with pytest.raises(ValueError):
+        A.server_of(A.STACK_BASE + 100)
+
+
+@given(st.integers(0, A.ADDR_MASK), st.integers(0, A.MAX_COLOR))
+def test_color_never_leaks_into_address(raw, color):
+    g = A.append_color(raw, color)
+    assert A.clear_color(g) == raw
+    assert A.get_color(g) == color

@@ -1,0 +1,73 @@
+"""Application-level tests: every app runs on every backend, GEMM's result
+is numerically checked against the single-shot oracle (inside run_gemm),
+and the paper's qualitative ordering holds at 8 nodes."""
+
+import pytest
+
+from repro.apps import APPS
+from repro.apps.dataframe import run_dataframe
+from repro.apps.gemm import run_gemm
+from repro.apps.kvstore import run_kvstore
+from repro.apps.socialnet import run_socialnet
+
+SMALL = {
+    "gemm": dict(n=256, tile=64),
+    "dataframe": dict(n_columns=4, chunks_per_column=8, n_ops=2),
+    "kvstore": dict(n_keys=64, n_ops=200),
+    "socialnet": dict(n_requests=40),
+}
+
+
+@pytest.mark.parametrize("app", list(APPS))
+@pytest.mark.parametrize("backend", ["drust", "gam", "grappa"])
+@pytest.mark.parametrize("n", [1, 2])
+def test_app_runs(app, backend, n):
+    r = APPS[app](n, backend=backend, **SMALL[app])
+    assert r.makespan_us > 0
+    assert r.ops > 0
+
+
+def test_gemm_numerics_all_backends():
+    for backend in ["drust", "gam", "grappa"]:
+        run_gemm(2, backend=backend, n=128, tile=64, check=True)
+
+
+def test_drust_beats_baselines_at_scale():
+    """Fig. 5 ordering: DRust fastest on every app at 8 nodes."""
+    for app, fn in APPS.items():
+        spans = {b: fn(8, backend=b, **SMALL[app]).makespan_us
+                 for b in ["drust", "gam", "grappa"]}
+        assert spans["drust"] < spans["gam"], f"{app}: drust !< gam"
+        assert spans["drust"] < spans["grappa"], f"{app}: drust !< grappa"
+
+
+def test_affinity_annotations_help():
+    base = run_dataframe(8, "drust").makespan_us
+    both = run_dataframe(8, "drust", use_tbox=True,
+                         use_spawn_to=True).makespan_us
+    assert both < base                  # Fig. 6: +TBox+spawn_to speeds up
+
+
+def test_single_node_overhead_small():
+    """DRust adds <= ~5% over the plain program on one node (paper: 2.42%)."""
+    from repro.apps.gemm import plain_gemm_us
+    r = run_gemm(1, backend="drust", n=512, tile=128)
+    plain = plain_gemm_us(n=512, tile=128)
+    overhead = r.makespan_us / plain - 1.0
+    assert overhead < 0.05, f"single-node overhead {overhead:.1%}"
+
+
+def test_kvstore_two_node_dip():
+    """Fig. 5d: every DSM dips when going 1 -> 2 nodes."""
+    for backend in ["drust", "gam", "grappa"]:
+        one = run_kvstore(1, backend=backend, n_keys=512, n_ops=600)
+        two = run_kvstore(2, backend=backend, n_keys=512, n_ops=600)
+        tput1 = one.ops / one.makespan_us
+        tput2 = two.ops / two.makespan_us
+        assert tput2 < tput1 * 1.35, f"{backend}: no 2-node pressure visible"
+
+
+def test_socialnet_reference_passing_beats_by_value():
+    ref_run = run_socialnet(4, backend="drust", n_requests=60)
+    val_run = run_socialnet(4, backend="drust", n_requests=60, by_value=True)
+    assert ref_run.makespan_us < val_run.makespan_us

@@ -1,0 +1,128 @@
+"""Checkpointing (color-versioned, elastic) and sharding-rule tests."""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.checkpoint import CheckpointManager, restore, save
+from repro.core.jaxstate import OwnedState
+from repro.dist.sharding import (_fit, activation_spec, batch_specs,
+                                 param_specs)
+from repro.models import init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def fake_mesh(**shape):
+    return types.SimpleNamespace(shape=shape)
+
+
+# ---------------------------------------------------------------- sharding
+def test_fit_drops_nondividing_axes():
+    m = fake_mesh(data=16, model=16)
+    assert _fit(m, P("data", "model"), (32, 32)) == P("data", "model")
+    assert _fit(m, P("data", "model"), (8, 32)) == P(None, "model")
+    m2 = fake_mesh(pod=2, data=16, model=16)
+    assert _fit(m2, P(("pod", "data"), None), (7,)) == P(None)
+
+
+def test_fit_keeps_divisible_prefix_of_tuple():
+    m = fake_mesh(pod=2, data=16, model=16)
+    # 16 % (2*16) != 0 but 16 % 2 == 0: keep the pod prefix only
+    spec = _fit(m, P(("pod", "data")), (16,))
+    assert spec == P(("pod",))
+
+
+def test_param_specs_cover_every_leaf():
+    m = fake_mesh(data=16, model=16)
+    for arch in ["qwen3_moe_235b", "recurrentgemma_9b", "rwkv6_3b"]:
+        cfg = configs.get(arch)
+        abstract = jax.eval_shape(lambda k: init_params(cfg, k), KEY)
+        specs = param_specs(m, abstract)
+        flat_p = jax.tree.leaves(abstract)
+        flat_s = jax.tree.leaves(specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s)
+        for leaf, spec in zip(flat_p, flat_s):
+            for dim, axes in zip(leaf.shape, tuple(spec)):
+                if axes is None:
+                    continue
+                n = 1
+                for a in (axes if isinstance(axes, tuple) else (axes,)):
+                    n *= m.shape[a]
+                assert dim % n == 0, f"{arch}: {leaf.shape} vs {spec}"
+
+
+def test_experts_sharded_over_model():
+    m = fake_mesh(data=16, model=16)
+    cfg = configs.get("qwen3_moe_235b")
+    abstract = jax.eval_shape(lambda k: init_params(cfg, k), KEY)
+    specs = param_specs(m, abstract)
+    wg = specs["layers"]["moe"]["w_gate"]
+    assert tuple(wg)[1] == "model"      # leading L dim, then experts
+
+
+def test_activation_and_batch_specs():
+    m = fake_mesh(data=16, model=16)
+    assert activation_spec(m, (256, 4096, 1024)) == P(("data",), "model", None)
+    assert activation_spec(m, (1, 1, 1024)) == P(None, None, None)
+    b = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    spec = jax.tree.leaves(batch_specs(m, b),
+                           is_leaf=lambda x: isinstance(x, P))[0]
+    assert spec[0] in (("data",), "data") and len(spec) <= 2
+
+
+# -------------------------------------------------------------- checkpoint
+def test_save_restore_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    save(tmp_path / "ck", tree, color=7, step=7)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out, manifest = restore(tmp_path / "ck", like)
+    assert manifest["color"] == 7
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_manager_epoch_batched(tmp_path):
+    state = OwnedState("s", {"w": jnp.zeros(4)})
+    mgr = CheckpointManager(tmp_path, state, every_n_epochs=2, keep=2)
+    for i in range(6):
+        with state.borrow_mut() as m:
+            m.set({"w": jnp.full(4, float(i))})
+    assert len(mgr.saved) == 2          # keep=2 enforced
+    colors = [c for c, _ in mgr.saved]
+    assert colors == [4, 6]             # every 2nd epoch
+    tree, man = mgr.restore_latest({"w": jax.ShapeDtypeStruct((4,),
+                                                              jnp.float32)})
+    assert man["color"] == 6
+    np.testing.assert_array_equal(np.asarray(tree["w"]), np.full(4, 5.0))
+    assert state.color == 6
+
+
+def test_restore_resumes_training(tmp_path):
+    """Kill-and-restart: restored state continues from the saved epoch."""
+    from repro.train import OptConfig, TrainState, synthetic_batches
+    cfg = configs.smoke("qwen3_0_6b")
+    params = init_params(cfg, KEY)
+    opt = OptConfig(lr=3e-3, warmup=2, decay_steps=50)
+    ts = TrainState(cfg, opt, params)
+    mgr = CheckpointManager(tmp_path, ts.state, every_n_epochs=1)
+    data = synthetic_batches(cfg.vocab, 4, 32)
+    batches = [jax.tree.map(jnp.asarray, next(data)) for _ in range(4)]
+    for b in batches[:3]:
+        ts.step(b)
+    # "crash": build a new TrainState and restore
+    ts2 = TrainState(cfg, opt, init_params(cfg, jax.random.PRNGKey(9)))
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        ts.state.read())
+    tree, man = restore(mgr.saved[-1][1], like)
+    ts2.state._tree = tree
+    assert man["color"] == 3
+    m = ts2.step(batches[3])
+    assert np.isfinite(float(m["loss"]))

@@ -1,0 +1,149 @@
+"""Unit tests for the coherence protocol (Algorithms 1-8)."""
+
+import pytest
+
+from repro.core import BorrowError, Cluster, addr as A
+
+
+def make():
+    cl = Cluster(4, backend="drust")
+    t0 = cl.main_thread(0)
+    t1 = cl.main_thread(0); t1.server = 1
+    t2 = cl.main_thread(0); t2.server = 2
+    return cl, t0, t1, t2
+
+
+def test_remote_read_fills_cache_and_counts():
+    cl, t0, t1, _ = make()
+    b = cl.backend.alloc(t0, 128, b"x" * 128)
+    cl.backend.read(t1, b)
+    H = cl.drust.caches[1]
+    assert len(H.entries) == 1
+    assert cl.sim.net.one_sided_reads == 1
+    cl.backend.read(t1, b)                      # second read: cache hit
+    assert cl.sim.net.one_sided_reads == 1
+    assert H.hits >= 1
+
+
+def test_remote_write_moves_object():
+    cl, t0, t1, _ = make()
+    b = cl.backend.alloc(t0, 128, b"old")
+    g0 = A.clear_color(b.g)
+    cl.backend.write(t1, b, b"new")
+    assert A.server_of(b.g) == 1                # moved to the writer
+    assert A.clear_color(b.g) != g0             # address change = invalidation
+    assert not cl.drust.heap.contains(g0)       # old storage deallocated
+
+
+def test_local_write_bumps_color_once_per_epoch():
+    cl, t0, _, _ = make()
+    b = cl.backend.alloc(t0, 64, 1)
+    assert A.get_color(b.g) == 0
+    cl.backend.write(t0, b, 2)                  # first write: bump
+    assert A.get_color(b.g) == 1
+    cl.backend.write(t0, b, 3)                  # same epoch (U set): no bump
+    assert A.get_color(b.g) == 1
+    cl.backend.read(t0, b)                      # reader resets U
+    cl.backend.write(t0, b, 4)                  # new epoch: bump
+    assert A.get_color(b.g) == 2
+
+
+def test_stale_cache_not_read_after_write():
+    cl, t0, t1, t2 = make()
+    b = cl.backend.alloc(t0, 64, b"v1")
+    assert cl.backend.read(t1, b) == b"v1"      # cached on server 1
+    cl.backend.write(t2, b, b"v2")              # moves to server 2
+    assert cl.backend.read(t1, b) == b"v2"      # MUST see the new value
+
+
+def test_owner_adopts_local_cache_copy():
+    cl, t0, t1, _ = make()
+    b = cl.backend.alloc(t0, 64, b"v1", server=1)
+    cl.backend.read(t0, b)                      # cache copy on server 0
+    reads_before = cl.sim.net.one_sided_reads
+    cl.drust.owner_write(t0, b, data=b"v2")     # Algorithm 8 lines 11-16
+    assert cl.sim.net.one_sided_reads == reads_before   # no re-copy
+    assert A.server_of(b.g) == 0
+    assert cl.backend.read(t0, b) == b"v2"
+
+
+def test_borrow_rules_enforced():
+    cl, t0, _, _ = make()
+    b = cl.backend.alloc(t0, 64, 0)
+    r = b.borrow(t0)
+    with pytest.raises(BorrowError):
+        b.borrow_mut(t0)
+    r.drop(t0)
+    m = b.borrow_mut(t0)
+    with pytest.raises(BorrowError):
+        b.borrow(t0)
+    m.deref_mut(t0)
+    m.drop(t0)
+    b.borrow(t0).drop(t0)
+
+
+def test_mutable_borrow_writeback_updates_owner():
+    cl, t0, t1, _ = make()
+    b = cl.backend.alloc(t0, 64, 10)
+    m = b.borrow_mut(t1)
+    m.deref_mut(t1)
+    cl.drust.heap.get(A.clear_color(m.g)).data = 11
+    old_owner_g = b.g
+    m.drop(t1)
+    assert b.g == m.g and b.g != old_owner_g
+    assert cl.backend.read(t0, b) == 11
+
+
+def test_transfer_evicts_source_cache(capsys):
+    cl, t0, t1, _ = make()
+    b = cl.backend.alloc(t0, 64, b"v", server=2)
+    cl.backend.read(t0, b)
+    assert len(cl.drust.caches[0].entries) == 1
+    # owner's pin was dropped at read end; transfer must clear residual copy
+    cl.drust.transfer(t0, b, 1)
+    assert b.home == 1
+
+
+def test_drop_deallocates_and_invalidates():
+    cl, t0, t1, _ = make()
+    b = cl.backend.alloc(t0, 64, b"v")
+    cl.backend.read(t1, b)
+    raw = A.clear_color(b.g)
+    cl.backend.free(t0, b)
+    assert not cl.drust.heap.contains(raw)
+    assert all(A.clear_color(g) != raw
+               for g in cl.drust.caches[1].entries)
+
+
+def test_tbox_group_fetch_single_rtt():
+    cl, t0, t1, _ = make()
+    head = cl.backend.alloc(t0, 64, b"head")
+    c1 = cl.backend.alloc(t0, 64, b"c1", tie_to=head)
+    c2 = cl.backend.alloc(t0, 64, b"c2", tie_to=c1)
+    reads_before = cl.sim.net.one_sided_reads
+    assert cl.backend.read(t1, head) == b"head"
+    assert cl.sim.net.one_sided_reads == reads_before + 1   # one batched READ
+    # children now local to server 1: no further network reads
+    assert cl.backend.read(t1, c1) == b"c1"
+    assert cl.backend.read(t1, c2) == b"c2"
+    assert cl.sim.net.one_sided_reads == reads_before + 1
+
+
+def test_tbox_moves_with_owner():
+    cl, t0, t1, _ = make()
+    head = cl.backend.alloc(t0, 64, b"head")
+    child = cl.backend.alloc(t0, 64, b"child", tie_to=head)
+    cl.backend.write(t1, head, b"head2")        # move the group
+    assert A.server_of(head.g) == 1
+    assert A.server_of(child.g) == 1            # tied child moved too
+
+
+def test_move_on_overflow():
+    cl, t0, _, _ = make()
+    b = cl.backend.alloc(t0, 64, 0)
+    b.g = A.append_color(b.g, A.MAX_COLOR)      # force the edge
+    cl.drust._mirror_color(b.g)
+    raw0 = A.clear_color(b.g)
+    cl.backend.write(t0, b, 1)
+    assert A.get_color(b.g) == 0                # reset
+    assert A.clear_color(b.g) != raw0           # relocated

@@ -1,0 +1,87 @@
+"""Protocol corners: D.1 stack/partial borrows, lazy cache eviction under
+memory pressure, allocator spill, cache hit accounting."""
+
+import numpy as np
+
+from repro.core import Cluster, StackRef, addr as A
+
+
+def make(n=3, **kw):
+    cl = Cluster(n, backend="drust", **kw)
+    ths = []
+    for s in range(n):
+        th = cl.main_thread(0)
+        th.server = s
+        ths.append(th)
+    return cl, ths
+
+
+def test_stackref_copy_and_writeback():
+    """D.1: a mutable borrow of a stack value copies it to the borrower and
+    writes back on drop; the parent's color bumps so caches miss."""
+    cl, (t0, t1, t2) = make()
+    parent = cl.drust.stack_val(t0, 64, {"field": 1})
+    color0 = A.get_color(parent.g)
+    ref = StackRef(cl.drust, parent, {"field": 1}, 64, src_server=0)
+    val = ref.deref_mut(t1)
+    val["field"] = 42
+    ref.drop(t1)                         # write-back + parent color bump
+    assert A.get_color(parent.g) == color0 + 1
+    assert cl.sim.net.one_sided_writes >= 1   # cross-server write-back
+
+
+def test_cache_eviction_under_pressure():
+    cl, (t0, t1, t2) = make()
+    boxes = [cl.backend.alloc(t0, 1024, bytes(1024)) for _ in range(8)]
+    for b in boxes:
+        cl.backend.read(t1, b)           # fill server 1's cache
+    H = cl.drust.caches[1]
+    assert len(H.entries) == 8
+    freed = cl.drust.evict_caches(1)     # all refcounts are 0 -> reclaim
+    assert freed == 8 * 1024
+    assert len(H.entries) == 0
+    # pinned entries survive eviction
+    r = boxes[0].borrow(t1)
+    r.deref(t1)
+    cl.drust.evict_caches(1)
+    assert len(H.entries) == 1
+    r.drop(t1)
+
+
+def test_allocator_spill_to_most_vacant():
+    cl, ths = make(partition_bytes=1 << 16)
+    t0 = ths[0]
+    cl.backend.alloc(t0, 60000, b"")     # fill server 0 past watermark
+    target = cl.controller.pick_alloc_server(0, 8192)
+    assert target != 0
+
+
+def test_cache_hit_rate_accounting():
+    cl, (t0, t1, t2) = make()
+    b = cl.backend.alloc(t0, 256, b"v")
+    for _ in range(5):
+        cl.backend.read(t1, b)
+    H = cl.drust.caches[1]
+    assert H.misses == 1 and H.hits == 4
+
+
+def test_group_bytes_and_tie_closure():
+    cl, (t0, *_ ) = make()
+    head = cl.backend.alloc(t0, 100, b"h")
+    c1 = cl.backend.alloc(t0, 200, b"c1", tie_to=head)
+    cl.backend.alloc(t0, 300, b"c2", tie_to=c1)        # nested tie
+    raw = A.clear_color(head.g)
+    assert len(cl.drust.heap.tie_closure(raw)) == 3
+    assert cl.drust.heap.group_bytes(raw) == 600
+
+
+def test_quarantine_delays_address_reuse():
+    from repro.core.heap import Partition
+    cl, (t0, *_ ) = make()
+    part = cl.drust.heap.partitions[0]
+    b = cl.backend.alloc(t0, 64, b"x")
+    raw = A.clear_color(b.g)
+    cl.backend.free(t0, b)
+    # immediately reallocating must not reuse the quarantined address
+    b2 = cl.backend.alloc(t0, 64, b"y")
+    assert A.clear_color(b2.g) != raw
