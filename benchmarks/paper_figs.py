@@ -119,6 +119,32 @@ def sec3_breakdown():
     ]
 
 
+def batch_plane_sweep(n_servers: int = 8):
+    """Batched I/O plane ablation (this repo's addition, not a paper figure):
+    socialnet/dataframe with the doorbell-coalesced plane on vs the *naive*
+    per-object-verb plane (``batch_io=False``: one READ verb per group
+    member, synchronous write-backs, per-request sends — NOT the seed's
+    cost model, which already coalesced group fetches).  ``derived`` is the
+    naive/batched round-trip ratio (the acceptance target is >= 2x on these
+    TBox-heavy apps); makespan rows carry the virtual wall clock."""
+    rows = []
+    for app, fn, kw in (("socialnet", run_socialnet, {}),
+                        ("dataframe", run_dataframe, {"use_tbox": True})):
+        on = fn(n_servers, "drust", batch_io=True, **kw)
+        off = fn(n_servers, "drust", batch_io=False, **kw)
+        ratio = off.net["round_trips"] / max(1, on.net["round_trips"])
+        rows.append((f"batchio_{app}_rtt_batched", on.makespan_us,
+                     on.net["round_trips"]))
+        rows.append((f"batchio_{app}_rtt_unbatched", off.makespan_us,
+                     off.net["round_trips"]))
+        rows.append((f"batchio_{app}_rtt_ratio", 0.0, round(ratio, 2)))
+        rows.append((f"batchio_{app}_bytes_batched", 0.0,
+                     on.net["bytes_moved"]))
+        rows.append((f"batchio_{app}_bytes_unbatched", 0.0,
+                     off.net["bytes_moved"]))
+    return rows
+
+
 def sec73_migration():
     """§7.3: thread-migration latency (paper: ~218 us average)."""
     cl = Cluster(8, backend="drust")
@@ -133,6 +159,7 @@ def all_rows(fast: bool = False):
     rows += fig5_scaling(nodes=(1, 8) if fast else NODES)
     rows += fig6_affinity()
     rows += fig7_coherence_cost()
+    rows += batch_plane_sweep()
     rows += table2_deref_latency()
     rows += sec3_breakdown()
     rows += sec73_migration()

@@ -4,9 +4,17 @@ The paper's core claim in microcosm: DRust needs ZERO control messages for
 cached reads and exactly one one-sided READ for cold ones; directory
 protocols pay multi-hop lookups and invalidation rounds; delegation pays a
 round trip for everything.
+
+The batched I/O plane sweeps measure what doorbell coalescing buys:
+round-trips and makespan for TBox group fetches (group size sweep), batched
+remote reads (server count sweep), and pipelined write-backs (depth sweep),
+each against the equivalent unbatched op sequence with identical final
+heap/cache state.
 """
 
 from __future__ import annotations
+
+import time
 
 from repro.core import Cluster
 
@@ -22,8 +30,9 @@ def _fresh(backend: str):
 
 def _msgs(cl) -> int:
     """Critical-path (synchronous) messages; DRust's invalidation/dealloc
-    traffic is asynchronous by design and reported separately."""
-    return cl.sim.net.total_msgs() - cl.sim.net.async_msgs
+    traffic and pipelined write-backs are asynchronous by design and
+    reported separately."""
+    return cl.sim.net.critical_path_msgs()
 
 
 def rows_for(backend: str):
@@ -50,13 +59,112 @@ def rows_for(backend: str):
     return out
 
 
+# --------------------------------------------------------------------------
+#  Batched I/O plane sweeps
+# --------------------------------------------------------------------------
+def group_fetch_sweep(group_sizes=(1, 4, 16, 64)):
+    """TBox affinity group of N chunks fetched through the head: the batched
+    plane issues ONE coalesced READ (1 doorbell, N verbs); the naive plane
+    expands the same group into N independent READ verbs."""
+    rows = []
+    for n in group_sizes:
+        for batch_io in (True, False):
+            cl = Cluster(2, batch_io=batch_io)
+            t0 = cl.main_thread(0)
+            t1 = cl.main_thread(0); t1.server = 1
+            prev, head = None, None
+            for _ in range(n):
+                prev = cl.backend.alloc(t0, 256, b"c" * 256, tie_to=prev)
+                head = head or prev
+            rt0, t_us0 = cl.sim.net.round_trips, t1.t_us
+            cl.backend.read(t1, head)
+            mode = "batched" if batch_io else "unbatched"
+            rows.append((f"group{n}_fetch_{mode}_rtt", t1.t_us - t_us0,
+                         cl.sim.net.round_trips - rt0))
+    return rows
+
+
+def read_many_sweep(n_objects=32, server_counts=(1, 2, 4, 8)):
+    """Doorbell-batched reads of objects spread over K source servers:
+    round trips collapse to K (one doorbell per server)."""
+    rows = []
+    for backend in ("drust", "gam", "grappa"):
+        for k in server_counts:
+            cl = Cluster(k + 1, backend=backend)
+            t0 = cl.main_thread(k)           # reader lives on the last server
+            boxes = [cl.backend.alloc(t0, 256, b"x" * 256, server=i % k)
+                     for i in range(n_objects)]
+            rt0, t_us0 = cl.sim.net.round_trips, t0.t_us
+            cl.backend.read_many(t0, boxes)
+            rows.append((f"readmany_{backend}_{k}srv_rtt", t0.t_us - t_us0,
+                         cl.sim.net.round_trips - rt0))
+    return rows
+
+
+def writeback_depth_sweep(depths=(1, 8, 64)):
+    """Pipelined DropMutRef write-backs: N remote writes post N async 8-byte
+    WRITEs; the critical path pays only the issue cost, round trips stay 0
+    until the fence (compare the seed's 1 sync round trip per write)."""
+    rows = []
+    for d in depths:
+        for batch_io in (True, False):
+            cl = Cluster(2, batch_io=batch_io)
+            t0 = cl.main_thread(0)
+            t1 = cl.main_thread(0); t1.server = 1
+            boxes = [cl.backend.alloc(t1, 64, i, server=1) for i in range(d)]
+            for b in boxes:                  # move every object to server 0
+                cl.backend.write(t0, b, 0)   # once: owner home stays t1
+            rt0, t_us0 = cl.sim.net.round_trips, t0.t_us
+            wb0 = cl.sim.net.async_writebacks
+            for i, b in enumerate(boxes):
+                cl.backend.write(t0, b, i)   # local write + 8B write-back
+            mode = "batched" if batch_io else "unbatched"
+            rows.append((f"wb_depth{d}_{mode}_critpath_rtt",
+                         t0.t_us - t_us0, cl.sim.net.round_trips - rt0))
+            if batch_io:
+                rows.append((f"wb_depth{d}_async_posted", cl.makespan_us(),
+                             cl.sim.net.async_writebacks - wb0))
+    return rows
+
+
+def clone_fastpath_guard(n_elems: int = 4096, reps: int = 30):
+    """Microbenchmark guard for ``ownership._clone``: flat scalar containers
+    must take the shallow fast path, not ``deepcopy``.  ``derived`` is the
+    speedup of ``_clone`` over ``copy.deepcopy`` — regressions show up as a
+    ratio near (or below) 1."""
+    import copy
+    from repro.core.ownership import _clone
+
+    payloads = {
+        "list": list(range(n_elems)),
+        "dict": {i: float(i) for i in range(n_elems)},
+    }
+    rows = []
+    for kind, data in payloads.items():
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _clone(data)
+        fast = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            copy.deepcopy(data)
+        deep = time.perf_counter() - t0
+        rows.append((f"clone_{kind}_fastpath_speedup", fast / reps * 1e6,
+                     round(deep / max(fast, 1e-9), 1)))
+    return rows
+
+
 def all_rows():
     rows = []
     for backend in ("drust", "gam", "grappa"):
         rows += rows_for(backend)
+    rows += group_fetch_sweep()
+    rows += read_many_sweep()
+    rows += writeback_depth_sweep()
+    rows += clone_fastpath_guard()
     return rows
 
 
 if __name__ == "__main__":
-    for name, _, n in all_rows():
-        print(f"{name}: {n}")
+    for name, us, n in all_rows():
+        print(f"{name}: {n}  ({us:.2f} us)")

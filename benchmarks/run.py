@@ -1,15 +1,67 @@
-"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--fast|--quick]``.
 
 Prints ``name,us_per_call,derived`` CSV — one section per paper table/figure
 plus the JAX-side kernel and roofline benches when their artifacts exist.
+
+``--quick`` is the CI smoke mode: it runs only the protocol micro-benchmarks
+and the batched-I/O-plane app sweep and writes a ``BENCH_protocol.json``
+summary (round trips, makespan, doorbell stats) so successive PRs leave a
+comparable perf trajectory.
 """
 
 from __future__ import annotations
 
+import json
 import sys
 
 
+def quick(out_path: str = "BENCH_protocol.json") -> dict:
+    from benchmarks import protocol_micro
+    from repro.apps.dataframe import run_dataframe
+    from repro.apps.socialnet import run_socialnet
+
+    rows = protocol_micro.all_rows()
+    summary: dict = {
+        "micro": {name: {"us": round(us, 3), "derived": derived}
+                  for name, us, derived in rows},
+        "apps": {},
+    }
+    for app, fn, kw in (
+        ("socialnet", run_socialnet, dict(n_requests=120)),
+        ("dataframe", run_dataframe, dict(n_columns=4, chunks_per_column=8,
+                                          n_ops=4, use_tbox=True)),
+    ):
+        entry = {}
+        for mode in (True, False):
+            r = fn(4, "drust", batch_io=mode, **kw)
+            entry["batched" if mode else "unbatched"] = {
+                "makespan_us": round(r.makespan_us, 2),
+                "round_trips": r.net["round_trips"],
+                "bytes_moved": r.net["bytes_moved"],
+                "doorbell_batches": r.net["doorbell_batches"],
+                "batched_verbs": r.net["batched_verbs"],
+                "async_writebacks": r.net["async_writebacks"],
+            }
+        entry["rtt_ratio"] = round(
+            entry["unbatched"]["round_trips"]
+            / max(1, entry["batched"]["round_trips"]), 2)
+        summary["apps"][app] = entry
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+    return summary
+
+
 def main() -> None:
+    if "--quick" in sys.argv:
+        summary = quick()
+        print("name,us_per_call,derived")
+        for name, meta in summary["micro"].items():
+            print(f"{name},{meta['us']:.2f},{meta['derived']}")
+        for app, entry in summary["apps"].items():
+            print(f"quick_{app}_rtt_ratio,0.00,{entry['rtt_ratio']}")
+        print("wrote BENCH_protocol.json", file=sys.stderr)
+        return
+
     fast = "--fast" in sys.argv
     print("name,us_per_call,derived")
 

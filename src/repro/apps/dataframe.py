@@ -13,6 +13,12 @@ Affinity annotations (§4.1.3, Fig. 6):
                        fetched in a single batched READ, deref check skipped.
   * ``use_spawn_to`` — columnar operators run on the server hosting their
                        input column instead of round-robin placement.
+
+``batch_io=True`` (default) issues the hash-table probe reads and the
+per-operation chunk scans through the doorbell-coalesced I/O plane (one
+fetch round per source server instead of one verb per entry/chunk);
+``batch_io=False`` keeps the legacy per-object path with identical final
+heap/cache state.
 """
 
 from __future__ import annotations
@@ -31,10 +37,11 @@ def run_dataframe(n_servers: int, backend: str = "drust",
                   chunk_rows: int = 512, n_ops: int = 8,
                   probes: int = 4, workers_per_server: int = 4,
                   cores: int = 16, use_tbox: bool = False,
-                  use_spawn_to: bool = False, seed: int = 0) -> AppResult:
+                  use_spawn_to: bool = False, batch_io: bool = True,
+                  seed: int = 0) -> AppResult:
     use_tbox = use_tbox and backend == "drust"
     use_spawn_to = use_spawn_to and backend == "drust"
-    cl = make_cluster(n_servers, backend, cores)
+    cl = make_cluster(n_servers, backend, cores, batch_io=batch_io)
     rng = np.random.default_rng(seed)
     chunk_bytes = chunk_rows * 8
     chunk_cycles = CYCLES_PER_BYTE * chunk_bytes / SIMD_LANES
@@ -89,27 +96,42 @@ def run_dataframe(n_servers: int, backend: str = "drust",
             else:
                 th = ths[(w + len(ths) // 2) % len(ths)]
             w += 1
-            for p in range(1, probes):                    # hash-table probing
-                cl.backend.read(th, index[(k - p) % len(index)])
-            srcs = cl.backend.read(th, index[k])
+            probe_handles = [index[(k - p) % len(index)]
+                             for p in range(1, probes)] + [index[k]]
+            if batch_io:                                  # batched probing
+                srcs = cl.backend.read_many(th, probe_handles)[-1]
+            else:
+                for h in probe_handles[:-1]:              # hash-table probing
+                    cl.backend.read(th, h)
+                srcs = cl.backend.read(th, index[k])
             if use_tbox:
                 # iterating the column dereferences the head TBox chain:
                 # the whole group lands in the local cache in one READ
                 cl.backend.read(th, col[0])
             acc = 0.0
-            for s_idx in srcs:
-                chunk = cl.backend.read(th, col[s_idx])   # scan pass
-                acc += float(np.sum(chunk))
-                cl.sim.compute(th, chunk_cycles)
-                chunk = cl.backend.read(th, col[s_idx])   # materialize pass
-                cl.sim.compute(th, chunk_cycles * 0.25)
+            if batch_io:
+                scan = cl.backend.read_many(th, [col[s] for s in srcs])
+                for chunk in scan:                        # scan pass
+                    acc += float(np.sum(chunk))
+                    cl.sim.compute(th, chunk_cycles)
+                cl.backend.read_many(th, [col[s] for s in srcs])
+                for _ in srcs:                            # materialize pass
+                    cl.sim.compute(th, chunk_cycles * 0.25)
+            else:
+                for s_idx in srcs:
+                    chunk = cl.backend.read(th, col[s_idx])   # scan pass
+                    acc += float(np.sum(chunk))
+                    cl.sim.compute(th, chunk_cycles)
+                    chunk = cl.backend.read(th, col[s_idx])   # materialize
+                    cl.sim.compute(th, chunk_cycles * 0.25)
             out = cl.backend.alloc(th, chunk_bytes, acc)
             cl.backend.write(th, out, acc)
             ops += 1
 
     return AppResult("dataframe", backend, n_servers, ops, cl.makespan_us(),
                      net=cl.sim.snapshot()["net"],
-                     extra={"use_tbox": use_tbox, "use_spawn_to": use_spawn_to})
+                     extra={"use_tbox": use_tbox, "use_spawn_to": use_spawn_to,
+                            "batch_io": batch_io})
 
 
 def plain_dataframe_us(n_columns: int = 8, chunks_per_column: int = 32,

@@ -8,6 +8,11 @@ DRust's win (Fig. 5b): no serialize/deserialize compute, no redundant
 copies, one one-sided READ per actual use.
 
 ``by_value=True`` reproduces the original (non-DSM) distributed baseline.
+``batch_io=True`` (default) lets each service drain its inbox and fetch the
+whole batch of referenced payloads through the doorbell-coalesced I/O plane
+(one fetch round per source server per drain instead of one verb per
+request); ``batch_io=False`` keeps the legacy per-object path — protocol
+state ends up identical either way, only the verb accounting coalesces.
 """
 
 from __future__ import annotations
@@ -28,8 +33,9 @@ RPC_STACK_CYCLES = 40_000          # Thrift/HTTP stack per side, cross-server
 def run_socialnet(n_servers: int, backend: str = "drust",
                   n_requests: int = 400, media_frac: float = 0.25,
                   workers_per_server: int = 4, cores: int = 16,
-                  by_value: bool = False, seed: int = 0) -> AppResult:
-    cl = make_cluster(n_servers, backend, cores)
+                  by_value: bool = False, batch_io: bool = True,
+                  seed: int = 0) -> AppResult:
+    cl = make_cluster(n_servers, backend, cores, batch_io=batch_io)
     rng = np.random.default_rng(seed)
     boot = cl.main_thread(0)
 
@@ -59,8 +65,36 @@ def run_socialnet(n_servers: int, backend: str = "drust",
         cl.sim.compute(th0, POST_PROC_CYCLES)
         inflight[i] = cl.backend.alloc(th0, nbytes_of[i],
                                        bytes(min(nbytes_of[i], 4096)))
+    # Requests in the same class k = i % len(ths) share their (src, dst)
+    # worker pair in every stage — the batched plane coalesces each class's
+    # messages/fetches, which changes no pairing and no worker assignment.
+    batched = batch_io and not by_value
+    classes = [[i for i in range(n_requests) if i % len(ths) == k]
+               for k in range(len(ths))]
     for s in range(1, n_stages):
         chan = chans[s - 1]
+        if batched:
+            for k, idxs in enumerate(classes):     # send sub-phase: one wire
+                if not idxs:                       # message per worker pair
+                    continue
+                src = stage_workers[s - 1][k]
+                dst = stage_workers[s][k]
+                chan.recv_server = dst.server
+                chan.send_many(src, [inflight[i] for i in idxs])
+            for k, idxs in enumerate(classes):     # recv sub-phase: drain the
+                if not idxs:                       # inbox, then batched fetch
+                    continue
+                dst = stage_workers[s][k]
+                handles = []
+                for i in idxs:
+                    handle = chan.recv(dst)
+                    proc = (STORE_PROC_CYCLES if s == n_stages - 1
+                            else POST_PROC_CYCLES)
+                    cl.sim.compute(dst, proc)
+                    handles.append(handle)
+                    inflight[i] = handle
+                cl.backend.read_many(dst, handles)
+            continue
         for i in range(n_requests):                # send sub-phase
             src = stage_workers[s - 1][i % len(ths)]
             dst = stage_workers[s][i % len(ths)]
@@ -88,7 +122,8 @@ def run_socialnet(n_servers: int, backend: str = "drust",
 
     return AppResult("socialnet", backend if not by_value else "original",
                      n_servers, n_requests, cl.makespan_us(),
-                     net=cl.sim.snapshot()["net"])
+                     net=cl.sim.snapshot()["net"],
+                     extra={"batch_io": batch_io and not by_value})
 
 
 def plain_socialnet_us(n_requests: int = 400, media_frac: float = 0.25,

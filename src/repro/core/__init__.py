@@ -15,7 +15,7 @@ from .fault import Replicator
 from .heap import GlobalHeap, Obj, Partition
 from .jaxstate import (ColoredAddr, OwnedState, ReplicaSlot, StateCache,
                        StateMutRef, StateRef)
-from .net import CostModel, NetStats, Sim
+from .net import CostModel, IOBatch, NetStats, Sim, WritebackQueue
 from .ownership import (BorrowError, DBox, DrustBackend, DrustRuntime, MutRef,
                         Ref, StackRef)
 from .runtime import Cluster, GlobalController, Scheduler, Thread
@@ -24,8 +24,8 @@ from .sync import DAtomic, DMutex
 __all__ = [
     "addr", "BorrowError", "Channel", "Cluster", "ColoredAddr", "CostModel",
     "DAtomic", "DBox", "DMutex", "DrustBackend", "DrustRuntime", "GamBackend",
-    "GHandle", "GlobalController", "GlobalHeap", "GrappaBackend",
+    "GHandle", "GlobalController", "GlobalHeap", "GrappaBackend", "IOBatch",
     "LocalCache", "MutRef", "NetStats", "Obj", "OwnedState", "Partition",
     "Ref", "ReplicaSlot", "Replicator", "Scheduler", "Sim", "StackRef",
-    "StateCache", "StateMutRef", "StateRef", "Thread",
+    "StateCache", "StateMutRef", "StateRef", "Thread", "WritebackQueue",
 ]

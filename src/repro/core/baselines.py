@@ -60,9 +60,11 @@ class GamBackend:
     INV_PROC_US = 1.5                      # per-sharer invalidation handling
     PER_BLOCK_US = 0.6                     # pipelined per-512B-block directory cost
 
-    def __init__(self, sim: Sim, heap: GlobalHeap | None = None):
+    def __init__(self, sim: Sim, heap: GlobalHeap | None = None,
+                 batch_io: bool = True):
         self.sim = sim
         self.heap = heap or GlobalHeap(sim.n)
+        self.batch_io = batch_io
         self.directory: dict[int, DirEntry] = {}
         # per-server block cache: raw -> payload snapshot
         self.caches: list[dict[int, Any]] = [dict() for _ in range(sim.n)]
@@ -138,6 +140,68 @@ class GamBackend:
         self.caches[th.server][h.raw] = data
         self.heap.get(h.raw).data = data
 
+    def read_many(self, th, handles) -> list:
+        """Doorbell-batched reads: cold misses to the same home node share
+        one directory request round (one base latency + summed transfer +
+        pipelined per-block cost), keeping the comparison with DRust's
+        batched plane fair.  Per-handle directory state transitions are
+        identical to N sequential ``read`` calls."""
+        if not self.batch_io:
+            return [self.read(th, h) for h in handles]
+        sim = self.sim
+        vals: dict[int, Any] = {}
+        cold: dict[int, list[int]] = {}          # home -> handle indices
+        queued: set[int] = set()                 # raws already in this batch
+        dups: list[tuple[int, int]] = []         # (index, raw) repeat fetches
+        for i, h in enumerate(handles):
+            d = self.directory[h.raw]
+            cache = self.caches[th.server]
+            if h.home == th.server and d.state == "S":
+                sim.local_access(th)
+                vals[i] = self.heap.get(h.raw).data
+            elif h.raw in cache and th.server in (d.sharers | {d.owner}):
+                sim.busy(th, self.LOCAL_HIT_US)
+                vals[i] = cache[h.raw]
+            elif h.raw in queued:                # duplicate: hit after fetch
+                dups.append((i, h.raw))
+            else:
+                queued.add(h.raw)
+                cold.setdefault(h.home, []).append(i)
+        for home, idxs in cold.items():
+            max_hops, blocks, nbytes = 1, 0, 0
+            for i in idxs:
+                h = handles[i]
+                d = self.directory[h.raw]
+                if d.state == "M" and d.owner not in (th.server, None):
+                    max_hops = 2                 # bounce to the modified owner
+                    d.state = "S"
+                    d.sharers.add(d.owner)
+                    d.owner = None
+                blocks += self._nblocks(h)
+                nbytes += h.size
+            lat = (self.COLD_READ_BASE_US * (0.6 + 0.4 * max_hops)
+                   + sim.cost.xfer_us(nbytes)
+                   + self.PER_BLOCK_US * (blocks - 1)
+                   + sim.cost.doorbell_us * (len(idxs) - 1))
+            th.t_us += lat
+            sim.net.two_sided_msgs += 2 * max_hops
+            sim.net.round_trips += max_hops
+            sim.net.doorbell_batches += 1
+            sim.net.batched_verbs += len(idxs)
+            sim.net.bytes_moved += nbytes
+            sim.servers[home].cpu_busy_us += (sim.cost.dir_proc_us
+                                              + 0.2 * (len(idxs) - 1))
+            sim.servers[home].msgs += 1
+            for i in idxs:
+                h = handles[i]
+                self.directory[h.raw].sharers.add(th.server)
+                self.caches[th.server][h.raw] = _clone(self.heap.get(h.raw).data)
+                vals[i] = self.caches[th.server][h.raw]
+        for i, raw in dups:                      # resolved from the warm cache
+            sim.busy(th, self.LOCAL_HIT_US)
+            vals[i] = self.caches[th.server][raw]
+        return [vals[i] for i in range(len(handles))]
+
     def update(self, th, h: GHandle, fn: Callable[[Any], Any]) -> Any:
         val = fn(self.read(th, h))
         self.write(th, h, val)
@@ -157,9 +221,11 @@ class GrappaBackend:
     name = "grappa"
     GRAIN = 2048        # bulk accesses delegate per 2 KiB segment (no caching)
 
-    def __init__(self, sim: Sim, heap: GlobalHeap | None = None):
+    def __init__(self, sim: Sim, heap: GlobalHeap | None = None,
+                 batch_io: bool = True):
         self.sim = sim
         self.heap = heap or GlobalHeap(sim.n)
+        self.batch_io = batch_io
         self._release_t: dict[int, float] = {}   # per-object home-core clock
 
     def alloc(self, th, size: int, data: Any = None, server: int | None = None,
@@ -219,6 +285,47 @@ class GrappaBackend:
     def read(self, th, h: GHandle) -> Any:
         self._delegate(th, h, 0, h.size)
         return _clone(self.heap.get(h.raw).data)
+
+    def read_many(self, th, handles) -> list:
+        """Doorbell-batched delegation: read requests for the same home node
+        ride one aggregated message (Grappa's own delegation aggregator);
+        the home core still executes every delegated op, so hot-home CPU
+        saturation is preserved — only the per-op wire round trip amortizes
+        (segments stream inside the aggregate: one round trip per home, the
+        same modeling choice as DRust's one-completion-per-doorbell; header
+        bytes stay per-segment to match ``_delegate``'s accounting)."""
+        if not self.batch_io:
+            return [self.read(th, h) for h in handles]
+        sim = self.sim
+        vals: dict[int, Any] = {}
+        by_home: dict[int, list[int]] = {}
+        for i, h in enumerate(handles):
+            if h.home == th.server:
+                proc = sim.cost.delegation_proc_us
+                th.t_us += proc
+                sim.servers[th.server].cpu_busy_us += proc
+                sim.local_access(th)
+                vals[i] = _clone(self.heap.get(h.raw).data)
+            else:
+                by_home.setdefault(h.home, []).append(i)
+        for home, idxs in by_home.items():
+            nsegs = sum(self._ndelegations(handles[i], handles[i].size)
+                        for i in idxs)
+            nbytes = sum(handles[i].size for i in idxs)
+            proc = sim.cost.delegation_proc_us * nsegs
+            lat = (sim.cost.two_sided_rtt_us
+                   + sim.cost.xfer_us(80 * nsegs + nbytes) + proc)
+            th.t_us += lat
+            sim.net.two_sided_msgs += 2
+            sim.net.round_trips += 1
+            sim.net.doorbell_batches += 1
+            sim.net.batched_verbs += nsegs
+            sim.net.bytes_moved += 80 * nsegs + nbytes
+            sim.servers[home].cpu_busy_us += proc
+            sim.servers[home].msgs += 1
+            for i in idxs:
+                vals[i] = _clone(self.heap.get(handles[i].raw).data)
+        return [vals[i] for i in range(len(handles))]
 
     def write(self, th, h: GHandle, data: Any) -> None:
         self._delegate(th, h, h.size, 0, mutates=True)

@@ -6,6 +6,22 @@ aggregation, §4.1.1); entries with refcount 0 are reclaimed lazily under
 memory pressure.  Because keys are colored, any write (which bumps the color
 or moves the object) makes stale entries unreachable — they age out without
 any invalidation message.
+
+Indexing
+--------
+Two structures keep every hot-path operation O(1) amortized:
+
+* ``_by_raw`` — secondary index from the *uncolored* raw address to the set
+  of colored keys currently caching it, so dealloc-time invalidation
+  (``invalidate_raw``, Appendix B.4) touches only matching entries instead
+  of scanning the whole map.
+* ``bytes_cached`` — a counter maintained on insert/remove/invalidate/evict
+  (it used to be a full scan summing partition sizes).
+
+Eviction under memory pressure is CLOCK-style second chance: ``lookup`` sets
+a reference bit, ``evict_clock`` sweeps a persistent hand, giving recently
+hit entries one more pass before their copies are freed.  Pinned entries
+(refcount > 0) are never evicted.
 """
 
 from __future__ import annotations
@@ -20,6 +36,8 @@ from .heap import Partition
 class CacheEntry:
     local: int          # raw address of the copy in the local partition
     refcount: int
+    size: int = 0       # copy size, captured at insert (for bytes_cached)
+    ref_bit: bool = True  # CLOCK second-chance bit
 
 
 class LocalCache:
@@ -27,6 +45,9 @@ class LocalCache:
         self.server = server
         self.partition = partition
         self.entries: dict[int, CacheEntry] = {}   # colored g -> entry
+        self._by_raw: dict[int, set[int]] = {}     # raw -> colored keys
+        self._bytes = 0
+        self._hand = 0                             # CLOCK hand (key index)
         self.hits = 0
         self.misses = 0
 
@@ -34,13 +55,21 @@ class LocalCache:
         e = self.entries.get(colored_g)
         if e is not None:
             self.hits += 1
+            e.ref_bit = True
         else:
             self.misses += 1
         return e
 
     def insert(self, colored_g: int, local_raw: int, refcount: int = 1) -> CacheEntry:
-        e = CacheEntry(local_raw, refcount)
+        size = (self.partition.get(local_raw).size
+                if self.partition.contains(local_raw) else 0)
+        old = self.entries.get(colored_g)
+        if old is not None:
+            self._drop_index(colored_g, old)
+        e = CacheEntry(local_raw, refcount, size=size)
         self.entries[colored_g] = e
+        self._by_raw.setdefault(A.clear_color(colored_g), set()).add(colored_g)
+        self._bytes += size
         return e
 
     def inc(self, colored_g: int) -> CacheEntry:
@@ -54,31 +83,83 @@ class LocalCache:
             e.refcount -= 1
 
     def remove(self, colored_g: int) -> CacheEntry | None:
-        return self.entries.pop(colored_g, None)
+        e = self.entries.pop(colored_g, None)
+        if e is not None:
+            self._drop_index(colored_g, e)
+        return e
+
+    def _drop_index(self, colored_g: int, e: CacheEntry) -> None:
+        raw = A.clear_color(colored_g)
+        keys = self._by_raw.get(raw)
+        if keys is not None:
+            keys.discard(colored_g)
+            if not keys:
+                del self._by_raw[raw]
+        self._bytes -= e.size
+
+    def _free_copy(self, e: CacheEntry) -> int:
+        if self.partition.contains(e.local):
+            freed = self.partition.get(e.local).size
+            self.partition.free(e.local)
+            return freed
+        return 0
 
     def invalidate_raw(self, raw: int) -> int:
         """Async invalidation on dealloc/move (Appendix B.4): drop every entry
-        whose underlying raw address matches, freeing the local copies."""
-        victims = [g for g in self.entries if A.clear_color(g) == raw]
+        whose underlying raw address matches, freeing the local copies.
+        O(1) amortized via the raw index (was a full-map scan)."""
+        victims = self._by_raw.pop(raw, None)
+        if not victims:
+            return 0
+        n = 0
         for g in victims:
-            e = self.entries.pop(g)
-            if self.partition.contains(e.local):
-                self.partition.free(e.local)
-        return len(victims)
+            e = self.entries.pop(g, None)
+            if e is None:
+                continue
+            self._bytes -= e.size
+            self._free_copy(e)
+            n += 1
+        return n
 
     def evict_unreferenced(self) -> int:
-        """Lazy reclamation under memory pressure (§4.2.1)."""
+        """Lazy reclamation under memory pressure (§4.2.1): free every
+        unpinned copy.  Returns bytes freed."""
         victims = [g for g, e in self.entries.items() if e.refcount <= 0]
         freed = 0
         for g in victims:
             e = self.entries.pop(g)
-            if self.partition.contains(e.local):
-                freed += self.partition.get(e.local).size
-                self.partition.free(e.local)
+            self._drop_index(g, e)
+            freed += self._free_copy(e)
+        return freed
+
+    def evict_clock(self, target_bytes: int) -> int:
+        """CLOCK second-chance eviction: free unpinned copies until at least
+        ``target_bytes`` are reclaimed (or every candidate had its chance).
+        Entries hit since the last sweep survive one extra pass."""
+        freed = 0
+        keys = list(self.entries)
+        if not keys:
+            return 0
+        scans = 0
+        limit = 2 * len(keys)
+        while freed < target_bytes and scans < limit:
+            self._hand %= len(keys)
+            g = keys[self._hand]
+            scans += 1
+            e = self.entries.get(g)
+            if e is None or e.refcount > 0:
+                self._hand += 1
+                continue
+            if e.ref_bit:
+                e.ref_bit = False
+                self._hand += 1
+                continue
+            self.entries.pop(g)
+            self._drop_index(g, e)
+            freed += self._free_copy(e)
+            self._hand += 1
         return freed
 
     @property
     def bytes_cached(self) -> int:
-        return sum(self.partition.get(e.local).size
-                   for e in self.entries.values()
-                   if self.partition.contains(e.local))
+        return self._bytes

@@ -38,6 +38,22 @@ class Channel:
         self.q.append((value, th.t_us))
         self.sent += 1
 
+    def send_many(self, th, values, nbytes_each: int | None = None) -> None:
+        """Doorbell-coalesced send: K messages to the same receiver ride ONE
+        wire message carrying K pointer words (or K payloads for by-value),
+        amortizing the per-message round trip — the batched counterpart of
+        a service handing its drained inbox downstream."""
+        sim = self.cluster.sim
+        per = POINTER_BYTES if nbytes_each is None else nbytes_each
+        if self.recv_server is not None and self.recv_server != th.server:
+            sim.rpc(th, self.recv_server, req_bytes=per * len(values),
+                    resp_bytes=0)
+        else:
+            sim.local_access(th)
+        for v in values:
+            self.q.append((v, th.t_us))
+        self.sent += len(values)
+
     def recv(self, th) -> Any:
         sim = self.cluster.sim
         self.recv_server = th.server

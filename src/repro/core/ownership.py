@@ -41,15 +41,32 @@ class BorrowError(RuntimeError):
     """A program the Rust borrow checker would have rejected."""
 
 
+try:
+    import numpy as _np
+except Exception:      # pragma: no cover
+    _np = None
+
+_SCALARS = (bytes, int, float, str, bool, complex, type(None))
+
+
 def _clone(data: Any) -> Any:
-    try:
-        import numpy as np
-        if isinstance(data, np.ndarray):
-            return data.copy()
-    except Exception:      # pragma: no cover
-        pass
-    if isinstance(data, (bytes, int, float, str, type(None))):
+    """Payload snapshot.  Scalars pass through; flat lists/tuples/dicts of
+    scalars and numpy arrays take a shallow-copy fast path (no memo dict, no
+    recursion); everything else falls back to ``deepcopy``."""
+    if isinstance(data, _SCALARS):
         return data
+    if _np is not None and isinstance(data, _np.ndarray):
+        return data.copy()
+    if isinstance(data, list):
+        if all(isinstance(x, _SCALARS) for x in data):
+            return list(data)
+    elif isinstance(data, tuple):
+        if all(isinstance(x, _SCALARS) for x in data):
+            return data
+    elif isinstance(data, dict):
+        if all(isinstance(k, _SCALARS) and isinstance(v, _SCALARS)
+               for k, v in data.items()):
+            return dict(data)
     return _copy.deepcopy(data)
 
 
@@ -195,13 +212,22 @@ class MutRef:
         return A.clear_color(self.g)
 
     def drop(self, th) -> None:
-        """DropMutRef: WRITE the colored address back into the owner slot."""
+        """DropMutRef: WRITE the colored address back into the owner slot.
+
+        The 8-byte pointer write-back is posted on the async write-back
+        queue: the dropping thread pays only the issue cost; completion is
+        tracked and fenced at synchronization points (ownership transfer,
+        makespan) — the next owner access goes through the new address
+        regardless, so coherence (Appendix C) is unaffected."""
         if self.dropped:
             return
         self.dropped = True
         rt, owner = self.rt, self.owner
         if owner.home != th.server:
-            rt.sim.rdma_write(th, owner.home, 8)             # one-sided WRITE
+            if rt.batch_io:
+                rt.sim.wb.post(th, owner.home, 8)            # pipelined WRITE
+            else:
+                rt.sim.rdma_write(th, owner.home, 8)         # sync WRITE
         else:
             rt.sim.local_access(th)
         owner.g = self.g
@@ -239,7 +265,10 @@ class StackRef:
         self.dropped = True
         rt = self.rt
         if th.server != self.src_server:
-            rt.sim.rdma_write(th, self.src_server, self.size)
+            if rt.batch_io:
+                rt.sim.wb.post(th, self.src_server, self.size)  # pipelined
+            else:
+                rt.sim.rdma_write(th, self.src_server, self.size)
         else:
             rt.sim.local_access(th, self.size)
         if self.parent is not None:
@@ -253,15 +282,25 @@ class StackRef:
 
 
 class DrustRuntime:
-    """Per-cluster protocol engine: heap + caches + the op implementations."""
+    """Per-cluster protocol engine: heap + caches + the op implementations.
 
-    def __init__(self, sim: Sim, heap: GlobalHeap | None = None):
+    ``batch_io`` selects the communication plane: ``True`` (default) uses
+    doorbell coalescing for group fetches and the async pipeline for
+    write-backs; ``False`` reproduces the naive plane — one verb per object,
+    synchronous write-backs — for A/B cost ablations.  Protocol *state* is
+    identical under both planes; only the cost accounting differs.
+    """
+
+    def __init__(self, sim: Sim, heap: GlobalHeap | None = None,
+                 batch_io: bool = True):
         self.sim = sim
+        self.batch_io = batch_io
         self.heap = heap or GlobalHeap(sim.n)
         self.caches = [LocalCache(s, self.heap.partitions[s])
                        for s in range(sim.n)]
         self.owner_of: dict[int, DBox] = {}    # raw addr -> unique owner handle
         self.obj_color: dict[int, int] = {}    # bookkeeping mirror (see module doc)
+        self.tie_parent: dict[int, int] = {}   # raw child -> raw tie parent
         # fault-tolerance hook; replaced by repro.core.fault.Replicator
         self.on_write_visible: Callable[[int], None] = lambda raw: None
         self.on_alloc: Callable[[int], None] = lambda raw: None
@@ -289,7 +328,9 @@ class DrustRuntime:
         self.owner_of[raw] = box
         self.obj_color[raw] = 0
         if tie_to is not None:
-            self.heap.get(A.clear_color(tie_to.g)).ties.append(raw)
+            parent_raw = A.clear_color(tie_to.g)
+            self.heap.get(parent_raw).ties.append(raw)
+            self.tie_parent[raw] = parent_raw
         self.on_alloc(raw)
         th.local_heap_bytes += size if server == th.server else 0
         return box
@@ -356,8 +397,11 @@ class DrustRuntime:
             else:                                            # lines 11-16: adopt
                 H.remove(box.g)
                 old_raw = A.clear_color(box.g)
-                self._dealloc_remote(th, old_raw)
                 new_raw = e.local
+                # the adopted copy inherits the tie edges of the original
+                self.heap.get(new_raw).ties = list(self.heap.get(old_raw).ties)
+                self._relocate_tie_links(old_raw, new_raw)
+                self._dealloc_remote(th, old_raw)
                 self.owner_of.pop(old_raw, None)
                 self.owner_of[new_raw] = box
                 self.obj_color[new_raw] = A.get_color(box.g)
@@ -376,28 +420,54 @@ class DrustRuntime:
 
     # ---- drop / transfer ---------------------------------------------------
     def drop_box(self, th, box: DBox) -> None:
-        """Owner out of scope: recursive drop of tied children, dealloc, and
-        async invalidation of cached copies on every server (B.4)."""
+        """Owner out of scope: drop of the whole tied closure, dealloc, and
+        async invalidation of cached copies on every server (B.4).
+
+        Dealloc requests and invalidations for the closure are *coalesced*:
+        one async message per remote server carrying every freed address
+        (instead of one per object), and one invalidation scrub per cache."""
         if box.dropped:
             return
         if box.live_mut or box.live_refs:
             raise BorrowError("drop while borrows alive")
-        box._release_pin()
-        box.dropped = True
-        raw = A.clear_color(box.g)
-        if not self.heap.contains(raw):
+        stack, group = [box], []
+        while stack:
+            b = stack.pop()
+            if b.dropped:
+                continue
+            if b.live_mut or b.live_refs:
+                raise BorrowError("drop while borrows alive")
+            b._release_pin()
+            b.dropped = True
+            raw = A.clear_color(b.g)
+            if not self.heap.contains(raw):
+                continue
+            group.append(raw)
+            for child in list(self.heap.get(raw).ties):
+                child_box = self.owner_of.get(child)
+                if child_box is not None and not child_box.dropped:
+                    stack.append(child_box)
+        if not group:
             return
-        for child in list(self.heap.get(raw).ties):
-            child_box = self.owner_of.get(child)
-            if child_box is not None and not child_box.dropped:
-                self.drop_box(th, child_box)
-        if A.server_of(raw) != th.server:
-            self.sim.async_msg(A.server_of(raw))
-        self.heap.free(raw)
-        self.on_free(raw)
-        self.owner_of.pop(raw, None)
-        self.obj_color.pop(raw, None)
-        self._async_invalidate(raw)
+        remote: dict[int, int] = {}              # server -> freed addr count
+        freed = set(group)
+        for raw in group:
+            s = A.server_of(raw)
+            if s != th.server:
+                remote[s] = remote.get(s, 0) + 1
+            self.heap.free(raw)
+            self.on_free(raw)
+            self.owner_of.pop(raw, None)
+            self.obj_color.pop(raw, None)
+            self._unlink_tie(raw, freed)
+        if self.batch_io:
+            for s, n in remote.items():
+                self.sim.async_msg(s, 16 * n)    # one coalesced dealloc req
+        else:
+            for s, n in remote.items():
+                for _ in range(n):
+                    self.sim.async_msg(s, 16)    # naive: one req per object
+        self._async_invalidate_many(group)
 
     def transfer(self, th_src, box: DBox, dst_server: int) -> None:
         """Ownership transfer between threads/servers (D.2): only the pointer
@@ -414,24 +484,65 @@ class DrustRuntime:
                 if part.contains(box.l):
                     part.free(box.l)
             box.l = A.NULL
+        # §4.2.3: ownership transfer is the visibility point — fence the
+        # async write-back pipeline before the pointer ships.
+        self.sim.wb.drain(th_src)
         self.sim.rpc(th_src, dst_server, req_bytes=16)   # ship the pointer
         box.home = dst_server
-        # §4.2.3: ownership transfer is the visibility point — flush batched
-        # write-backs for this object to the backup partition now.
+        # ... and flush batched write-backs to the backup partition now.
         self.on_transfer(A.clear_color(box.g))
 
     # ---- internals ---------------------------------------------------------
     def _group(self, raw: int) -> list[int]:
         return self.heap.tie_closure(raw)
 
-    def _copy_in(self, th, colored_g: int) -> int:
+    def _relocate_tie_links(self, old_raw: int, new_raw: int,
+                            moved: dict[int, int] | None = None) -> None:
+        """An object changed address: keep the tie graph consistent — the
+        parent's ``ties`` entry, the reverse ``tie_parent`` index, and the
+        children's back-links.  ``moved`` maps every old→new address of a
+        group move (in-group parents are rewritten by their own call)."""
+        parent = self.tie_parent.pop(old_raw, None)
+        if parent is not None:
+            in_group = moved is not None and parent in moved
+            parent_now = moved[parent] if in_group else parent
+            self.tie_parent[new_raw] = parent_now
+            if not in_group and self.heap.contains(parent_now):
+                ties = self.heap.get(parent_now).ties
+                for i, t in enumerate(ties):
+                    if t == old_raw:
+                        ties[i] = new_raw
+        if self.heap.contains(new_raw):
+            for child in self.heap.get(new_raw).ties:
+                if child in self.tie_parent:
+                    self.tie_parent[child] = new_raw
+
+    def _unlink_tie(self, raw: int, freed: set[int] | None = None) -> None:
+        """An object was freed: drop its reverse link and, if its tie parent
+        survives, remove the dangling forward edge."""
+        parent = self.tie_parent.pop(raw, None)
+        if parent is not None and (freed is None or parent not in freed) \
+                and self.heap.contains(parent):
+            ties = self.heap.get(parent).ties
+            if raw in ties:
+                ties.remove(raw)
+
+    def _copy_in(self, th, colored_g: int, batch=None) -> int:
         """COPY: fetch object (+ TBox group) into the local cache; returns the
-        local copy address of the root.  One batched one-sided READ."""
+        local copy address of the root.  The group's N members are N coalesced
+        verbs behind ONE doorbell (§4.1.3); with a caller-provided ``batch``
+        the verbs join a larger doorbell committed by the caller."""
         raw = A.clear_color(colored_g)
-        src = A.server_of(raw)
         group = self._group(raw)
-        total = sum(self.heap.get(a).size for a in group)
-        self.sim.rdma_read(th, src, total)
+        own = batch is None
+        if own and self.batch_io:
+            batch = self.sim.batch()
+        if batch is not None:
+            for a in group:
+                batch.add_read(A.server_of(a), self.heap.get(a).size)
+        else:                            # naive plane: one READ verb per object
+            for a in group:
+                self.sim.rdma_read(th, A.server_of(a), self.heap.get(a).size)
         H = self.caches[th.server]
         part = self.heap.partitions[th.server]
         root_local = A.NULL
@@ -444,6 +555,8 @@ class DrustRuntime:
             else:
                 H.insert(A.append_color(a, self.obj_color.get(a, 0)), local,
                          refcount=0)
+        if own and batch is not None:
+            batch.commit(th)
         return root_local
 
     def _move_in(self, th, colored_g: int) -> int:
@@ -454,7 +567,14 @@ class DrustRuntime:
         src = A.server_of(raw)
         group = self._group(raw)
         total = sum(self.heap.get(a).size for a in group)
-        self.sim.rdma_read(th, src, total)
+        if self.batch_io:
+            batch = self.sim.batch()
+            for a in group:
+                batch.add_read(A.server_of(a), self.heap.get(a).size)
+            batch.commit(th)
+        else:                            # naive plane: one READ verb per object
+            for a in group:
+                self.sim.rdma_read(th, A.server_of(a), self.heap.get(a).size)
         part = self.heap.partitions[th.server]
         remap: dict[int, int] = {}
         for a in group:
@@ -467,14 +587,19 @@ class DrustRuntime:
             new_obj.ties = [remap.get(t, t) for t in old.ties]
         for a in group:
             self.heap.free(a)
-            self.sim.async_msg(src)                      # async dealloc req
-            self._async_invalidate(a)
             owner = self.owner_of.pop(a, None)
             color = self.obj_color.pop(a, 0)
             self.owner_of[remap[a]] = owner
             self.obj_color[remap[a]] = color
+            self._relocate_tie_links(a, remap[a], moved=remap)
             if owner is not None and a != raw:
                 owner.g = A.append_color(remap[a], A.get_color(owner.g))
+        if self.batch_io:
+            self.sim.async_msg(src, 16 * len(group))     # coalesced dealloc req
+        else:
+            for _ in group:
+                self.sim.async_msg(src, 16)              # naive: one per object
+        self._async_invalidate_many(group)
         th.local_heap_bytes += total
         return remap[raw]
 
@@ -491,6 +616,7 @@ class DrustRuntime:
         self.owner_of[new_raw] = owner
         self.obj_color.pop(raw, None)
         self.obj_color[new_raw] = 0
+        self._relocate_tie_links(raw, new_raw)
         self._async_invalidate(raw)
         self.sim.busy(th, self.sim.cost.alloc_us)
         return new_raw
@@ -505,18 +631,77 @@ class DrustRuntime:
 
     def _async_invalidate(self, raw: int) -> None:
         """Dealloc-time cache scrub (B.4) — async, off the critical path."""
+        self._async_invalidate_many((raw,))
+
+    def _async_invalidate_many(self, raws) -> None:
+        """Coalesced B.4 scrub: ONE async message per cache server covers
+        every dropped address (O(1) per address via the cache's raw index).
+        The naive plane sends one scrub message per (address, server) hit."""
         for s, H in enumerate(self.caches):
-            n = H.invalidate_raw(raw)
+            n = 0
+            msgs = 0
+            for raw in raws:
+                hit = H.invalidate_raw(raw)
+                n += hit
+                msgs += 1 if hit else 0
             if n:
                 self.sim.net.invalidations += n
-                self.sim.async_msg(s, 16)
+                if self.batch_io:
+                    self.sim.async_msg(s, 16 * msgs)     # one msg, all addrs
+                else:
+                    for _ in range(msgs):
+                        self.sim.async_msg(s, 16)
 
     def _mirror_color(self, colored_g: int) -> None:
         self.obj_color[A.clear_color(colored_g)] = A.get_color(colored_g)
 
+    # ---- batched reads ------------------------------------------------------
+    def read_many(self, th, boxes) -> list:
+        """Batched immutable read of N owners: every cold miss (and its TBox
+        group) joins ONE IOBatch — one doorbell per source server — instead
+        of N independent READ verbs.  The cache/heap end state is identical
+        to N sequential ``read`` calls (same entries, refcounts, payloads),
+        so the coherence lemmas (Appendix C) are untouched; only the cost
+        accounting coalesces."""
+        sim = self.sim
+        refs = [b.borrow(th) for b in boxes]
+        if not self.batch_io:            # naive plane: N independent derefs
+            vals = [r.deref(th) for r in refs]
+            for r in refs:
+                r.drop(th)
+            return vals
+        H = self.caches[th.server]
+        batch = sim.batch()
+        vals = []
+        for r in refs:
+            sim.deref_check(th)
+            if A.server_of(r.g) == th.server:
+                sim.local_access(th)
+                vals.append(self.heap.get(A.clear_color(r.g)).data)
+                continue
+            if r.l == A.NULL:
+                sim.busy(th, sim.cost.hashmap_us)
+                e = H.lookup(r.g)
+                if e is not None:
+                    r.l = e.local
+                    e.refcount += 1
+                else:
+                    r.l = self._copy_in(th, r.g, batch)
+                    H.insert(r.g, r.l, refcount=1)
+            sim.local_access(th)
+            vals.append(self.heap.get(r.l).data)
+        batch.commit(th)
+        for r in refs:
+            r.drop(th)
+        return vals
+
     # ---- memory pressure (§4.2.1) -------------------------------------------
-    def evict_caches(self, server: int) -> int:
-        return self.caches[server].evict_unreferenced()
+    def evict_caches(self, server: int, target_bytes: int | None = None) -> int:
+        """Reclaim unpinned cache copies: full sweep by default, CLOCK
+        second-chance partial eviction when ``target_bytes`` is given."""
+        if target_bytes is None:
+            return self.caches[server].evict_unreferenced()
+        return self.caches[server].evict_clock(target_bytes)
 
     def frac_used(self, server: int) -> float:
         return self.heap.partitions[server].frac_used
@@ -549,6 +734,10 @@ class DrustBackend:
         """Long-lived immutable borrow (caller drops)."""
         r = box.borrow(th)
         return r.deref(th), r
+
+    def read_many(self, th, boxes) -> list:
+        """Doorbell-batched reads: cold misses coalesce per source server."""
+        return self.rt.read_many(th, boxes)
 
     def write(self, th, box: DBox, data: Any) -> None:
         m = box.borrow_mut(th)

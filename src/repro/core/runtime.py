@@ -226,18 +226,20 @@ class Cluster:
 
     def __init__(self, n_servers: int, backend: str = "drust",
                  cores_per_server: int = 16, cost: CostModel | None = None,
-                 partition_bytes: int | None = None, replicate: bool = False):
+                 partition_bytes: int | None = None, replicate: bool = False,
+                 batch_io: bool = True):
         self.sim = Sim(n_servers, cores_per_server, cost)
         self.heap = GlobalHeap(n_servers, partition_bytes)
         self.backend_name = backend
         self.backend_drust = backend == "drust"
+        self.batch_io = batch_io
         if backend == "drust":
-            self.drust = DrustRuntime(self.sim, self.heap)
+            self.drust = DrustRuntime(self.sim, self.heap, batch_io=batch_io)
             self.backend = DrustBackend(self.drust)
         elif backend == "gam":
-            self.backend = GamBackend(self.sim, self.heap)
+            self.backend = GamBackend(self.sim, self.heap, batch_io=batch_io)
         elif backend == "grappa":
-            self.backend = GrappaBackend(self.sim, self.heap)
+            self.backend = GrappaBackend(self.sim, self.heap, batch_io=batch_io)
         else:
             raise ValueError(f"unknown backend {backend!r}")
         self.scheduler = Scheduler(self)

@@ -1,0 +1,15 @@
+"""Version tolerance for the Pallas TPU API surface.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
+JAX releases; the kernels are written against the new name and this shim
+maps it onto whichever spelling the installed JAX provides.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

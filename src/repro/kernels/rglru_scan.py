@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 
 def _kernel(a_ref, b_ref, h_ref, carry_ref, *, chunk: int):
     t = pl.program_id(2)
@@ -55,7 +57,7 @@ def rglru_scan(a, b, *, chunk: int = 256, block_d: int = 512,
         out_specs=pl.BlockSpec((1, chunk, bd), lambda bi, di, ti: (bi, ti, di)),
         out_shape=jax.ShapeDtypeStruct((B, T, D), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

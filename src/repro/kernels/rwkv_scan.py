@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 
 def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, sout_ref, s_ref, *,
             chunk: int):
@@ -86,7 +88,7 @@ def rwkv_scan(r, k, v, logw, u, *, chunk: int = 128,
             jax.ShapeDtypeStruct((BH, M, M), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((M, M), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rf, kf, vf, lwf, uf)

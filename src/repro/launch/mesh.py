@@ -2,6 +2,9 @@
 
 A function, not a module-level constant: importing this module must never
 touch jax device state (the dry-run sets XLA_FLAGS before any jax init).
+
+``jax.sharding.AxisType`` (and ``make_mesh``'s ``axis_types`` kwarg) only
+exist in newer JAX releases; older installs get plain meshes.
 """
 
 from __future__ import annotations
@@ -9,15 +12,20 @@ from __future__ import annotations
 import jax
 
 
+def _axis_kw(n_axes: int) -> dict:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips when ``multi_pod``."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, smoke dry-runs on few host devices)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes), **_axis_kw(len(axes)))

@@ -1,0 +1,46 @@
+"""Optional-dependency guard for property-based tests.
+
+``hypothesis`` is a dev-only dependency (see requirements.txt); on machines
+without it the property tests must *skip cleanly* instead of failing the
+whole collection.  Import ``given``/``settings``/``st`` from here:
+
+    from _hypcompat import HAVE_HYPOTHESIS, given, settings, st
+
+When hypothesis is installed these are the real objects; when it is absent,
+``given`` decorates the test with ``pytest.mark.skip`` and ``st`` is an
+inert strategy stand-in (strategy expressions are built at module import
+time, so they must not raise).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _InertStrategies:
+        """Builds inert placeholders for any strategy expression."""
+
+        def __getattr__(self, name):
+            def _make(*_a, **_k):
+                return None
+            return _make
+
+    st = _InertStrategies()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -1,7 +1,7 @@
 """Colored-address and pointer-layout unit tests (paper Fig. 4/8)."""
 
 import pytest
-from hypothesis import given, strategies as st
+from _hypcompat import given, st
 
 from repro.core import addr as A
 

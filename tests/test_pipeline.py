@@ -9,6 +9,10 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("repro.dist.pipeline",
+                    reason="repro.dist not in tree yet (pending PR)")
 
 from repro.dist.pipeline import pipeline_apply
 

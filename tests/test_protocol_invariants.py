@@ -15,8 +15,7 @@ different servers.  Invariants checked after every operation:
 
 from __future__ import annotations
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypcompat import given, settings, st
 
 from repro.core import Cluster, addr as A
 
@@ -25,7 +24,7 @@ N_SERVERS = 4
 op_strategy = st.lists(
     st.tuples(
         st.sampled_from(["read", "write", "owner_read", "owner_write",
-                         "transfer", "epoch_read"]),
+                         "transfer", "epoch_read", "read_many"]),
         st.integers(0, N_SERVERS - 1),      # acting thread/server
         st.integers(0, 2),                  # which object
     ),
@@ -52,6 +51,11 @@ def test_data_value_invariant(ops):
             val = cl.backend.read(th, box)          # Ref path (Alg. 4)
             assert val == latest[o], "Data-Value invariant violated"
             seen_addrs[o].add(box.g)
+        elif kind == "read_many":
+            vals = cl.backend.read_many(th, boxes)  # doorbell-batched path
+            assert vals == latest, "Data-Value invariant violated (batched)"
+            for i, b in enumerate(boxes):
+                seen_addrs[i].add(b.g)
         elif kind == "owner_read":
             val = cl.drust.owner_read(th, box)      # owner path (Alg. 7)
             assert val == latest[o], "Data-Value invariant violated"
@@ -98,7 +102,9 @@ def test_refcounts_balanced(ops):
 
     for kind, s, o in ops:
         th, box = ths[s], boxes[o]
-        if kind.endswith("read"):
+        if kind == "read_many":
+            cl.backend.read_many(th, boxes)
+        elif kind.endswith("read"):
             r = box.borrow(th)
             r.deref(th)
             r.drop(th)
@@ -113,6 +119,39 @@ def test_refcounts_balanced(ops):
             assert e.refcount == 0, f"leaked refcount on {g:#x}"
     for box in boxes:
         assert box.live_refs == 0 and not box.live_mut
+
+
+def test_batched_plane_preserves_coherence_deterministic():
+    """Non-property version (runs even without hypothesis): interleaved
+    batched group fetches, writes, and pipelined write-backs must keep the
+    Data-Value and Stale-Value-Elimination lemmas intact."""
+    cl = Cluster(N_SERVERS, backend="drust")
+    ths = []
+    for s in range(N_SERVERS):
+        th = cl.main_thread(0)
+        th.server = s
+        ths.append(th)
+    head = cl.backend.alloc(ths[0], 64, ("h", 0))
+    c1 = cl.backend.alloc(ths[0], 64, ("c", 1), tie_to=head)
+    c2 = cl.backend.alloc(ths[0], 64, ("c", 2), tie_to=c1)
+    # batched group fetch on server 1, then the whole group moves on write
+    assert cl.backend.read_many(ths[1], [head, c1, c2]) == \
+        [("h", 0), ("c", 1), ("c", 2)]
+    cl.backend.write(ths[2], head, ("h", 1))         # move + async write-back
+    assert cl.backend.read(ths[1], head) == ("h", 1)  # no stale value
+    assert cl.backend.read_many(ths[3], [c2, c1]) == [("c", 2), ("c", 1)]
+    cl.backend.write(ths[1], c1, ("c", 9))
+    assert cl.backend.read_many(ths[3], [head, c1, c2]) == \
+        [("h", 1), ("c", 9), ("c", 2)]
+    for H in cl.drust.caches:                        # every pin released
+        for g, e in H.entries.items():
+            assert e.refcount == 0, f"leaked refcount on {g:#x}"
+    cl.backend.free(ths[0], head)                    # drops the tied closure
+    for box in (head, c1, c2):
+        raw = A.clear_color(box.g)
+        assert not cl.drust.heap.contains(raw)
+        for H in cl.drust.caches:
+            assert raw not in H._by_raw
 
 
 @settings(max_examples=30, deadline=None)
