@@ -1,0 +1,100 @@
+"""Bench-regression gate: fail CI when the protocol trajectory regresses.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--baseline BENCH_protocol.json] [--tolerance 0.10] [--out current.json]
+
+Runs ``benchmarks/run.py --quick`` (protocol micro-benchmarks + the
+batched-I/O app sweep) and compares the *deterministic* metrics against
+the committed ``BENCH_protocol.json``:
+
+  * per-app round trips and virtual makespan (batched and unbatched
+    planes) — the paper's headline trajectory;
+  * protocol message counts (``proto_*_msgs`` derived values).
+
+Wall-clock microsecond columns are ignored — they are noise on shared CI
+runners; everything gated here comes from the deterministic simulator.
+A metric more than ``tolerance`` (default 10%) above its baseline fails
+the gate (exit 1).  After an intentional perf change, regenerate the
+baseline with ``PYTHONPATH=src python -m benchmarks.run --quick`` and
+commit the updated ``BENCH_protocol.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+APP_METRICS = ("round_trips", "makespan_us")
+APP_MODES = ("batched", "unbatched")
+
+
+def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
+    """Return a list of human-readable regression descriptions (empty = OK)."""
+    failures = []
+    for app, base_entry in sorted(baseline.get("apps", {}).items()):
+        cur_entry = current.get("apps", {}).get(app)
+        if cur_entry is None:
+            failures.append(f"apps/{app}: missing from current run")
+            continue
+        for mode in APP_MODES:
+            for metric in APP_METRICS:
+                base = base_entry[mode][metric]
+                cur = cur_entry.get(mode, {}).get(metric)
+                if cur is None:
+                    failures.append(f"apps/{app}/{mode}/{metric}: missing")
+                elif cur > base * (1.0 + tolerance):
+                    failures.append(
+                        f"apps/{app}/{mode}/{metric}: {cur} vs baseline "
+                        f"{base} (+{100 * (cur / base - 1):.1f}%, "
+                        f"tol {100 * tolerance:.0f}%)")
+    for name, meta in sorted(baseline.get("micro", {}).items()):
+        if not name.endswith("_msgs"):
+            continue                       # wall-clock rows: not gated
+        cur_meta = current.get("micro", {}).get(name)
+        if cur_meta is None:
+            failures.append(f"micro/{name}: missing from current run")
+            continue
+        base, cur = meta["derived"], cur_meta["derived"]
+        if cur > base * (1.0 + tolerance):
+            failures.append(
+                f"micro/{name}: {cur} msgs vs baseline {base} "
+                f"(tol {100 * tolerance:.0f}%)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_protocol.json")
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument("--out", default="/tmp/BENCH_current.json",
+                    help="where the fresh --quick summary is written")
+    ap.add_argument("--current", default=None,
+                    help="compare an existing summary instead of re-running "
+                    "(debugging the gate itself)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if args.current:
+        with open(args.current) as f:
+            current = json.load(f)
+    else:
+        from benchmarks.run import quick
+        current = quick(out_path=args.out)
+
+    failures = compare(baseline, current, args.tolerance)
+    if failures:
+        print(f"BENCH REGRESSION vs {args.baseline}:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    n_gated = sum(1 for n in baseline.get("micro", {}) if n.endswith("_msgs"))
+    n_gated += len(baseline.get("apps", {})) * len(APP_MODES) * len(APP_METRICS)
+    print(f"bench gate OK: {n_gated} metrics within "
+          f"{100 * args.tolerance:.0f}% of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

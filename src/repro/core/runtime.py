@@ -196,7 +196,13 @@ class GlobalController:
         threads = [t for t in cl.scheduler.threads if not t.done]
         for s in range(cl.sim.n):
             if self.mem_frac(s) > self.MEM_HI:
-                cl.backend_drust and cl.drust.evict_caches(s)
+                if cl.backend_drust:
+                    # incremental CLOCK eviction toward the watermark — only
+                    # the excess bytes are reclaimed, so warm copies below
+                    # the high-water mark survive the pressure event
+                    part = cl.heap.partitions[s]
+                    excess = part.used - int(self.MEM_HI * part.capacity)
+                    cl.drust.evict_caches(s, target_bytes=excess)
                 victims = sorted((t for t in threads if t.server == s),
                                  key=lambda t: -t.local_heap_bytes)
                 if victims and self.mem_frac(s) > self.MEM_HI:

@@ -1,0 +1,18 @@
+"""Distributed execution rules for the JAX side of the reproduction.
+
+This package is the ML-stack analogue of the DSM core's "global heap +
+per-server sharded ownership" (DESIGN §2.2): a single *logical* view of
+every tensor (the PGAS address space) plus a per-mesh partition map that
+says which server owns which shard.  Three submodules:
+
+* ``sharding``    — the partition map: mesh registry, name-based parameter
+                    rules, batch/cache/activation specs, divisor fitting.
+* ``pipeline``    — GPipe-style microbatch scheduling of a stage-stacked
+                    function over a mesh axis.
+* ``compression`` — int8 wire/checkpoint compression with error bounds
+                    compatible with error-feedback accumulation.
+"""
+
+from . import compression, pipeline, sharding
+
+__all__ = ["compression", "pipeline", "sharding"]

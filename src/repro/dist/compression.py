@@ -1,0 +1,74 @@
+"""Wire / checkpoint compression: symmetric int8 quantization.
+
+``quantize_int8`` maps a float tensor to (int8 codes, f32 scale) with
+absolute error bounded by ``scale / 2`` — the bound the error-feedback
+trick relies on: carrying the residual into the next quantization keeps
+the accumulated bias below one quantization step instead of growing with
+the step count.  4x fewer bytes on the wire (gradients, weight refresh)
+and in checkpoints.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 1e-30
+
+
+def _is_packed(x) -> bool:
+    """A leaf produced by ``quantize_tree``."""
+    return isinstance(x, dict) and set(x) == {"q", "scale", "dtype"}
+
+
+def quantize_int8(x, axis=None):
+    """Quantize to int8 with a symmetric scale.
+
+    ``axis=None`` uses one scale per tensor; an int/tuple keeps a scale
+    per remaining dim (channel-wise, tighter error for skewed tensors).
+    Returns ``(codes int8, scale f32)`` with ``|x - codes*scale| <= scale/2``.
+    """
+    xf = jnp.asarray(x).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf)) if axis is None \
+        else jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, _TINY) / 127.0
+    codes = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_int8(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+def quantize_tree(tree, min_size: int = 64):
+    """Quantize every float leaf with ``size >= min_size``; small leaves
+    (norms, scalars) stay exact.  Returns a pytree of
+    ``{"q": int8, "scale": f32}`` dicts / passthrough leaves."""
+    def one(leaf):
+        arr = jnp.asarray(leaf)
+        if arr.size < min_size or not jnp.issubdtype(arr.dtype, jnp.floating):
+            return arr
+        q, s = quantize_int8(arr)
+        return {"q": q, "scale": s, "dtype": str(arr.dtype)}
+    return jax.tree.map(one, tree)
+
+
+def dequantize_tree(tree):
+    def one(leaf):
+        if _is_packed(leaf):
+            return dequantize_int8(leaf["q"], leaf["scale"]).astype(
+                jnp.dtype(leaf["dtype"]))
+        return leaf
+    return jax.tree.map(one, tree, is_leaf=_is_packed)
+
+
+def wire_bytes(tree) -> int:
+    """Bytes a (possibly quantized) pytree occupies on the wire."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=_is_packed):
+        if _is_packed(leaf):
+            total += leaf["q"].size + leaf["scale"].size * 4
+        else:
+            arr = jnp.asarray(leaf)
+            total += arr.size * arr.dtype.itemsize
+    return total

@@ -7,8 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist.sharding",
-                    reason="repro.dist not in tree yet (pending PR)")
 from jax.sharding import PartitionSpec as P
 
 from repro import configs

@@ -1,0 +1,247 @@
+"""Direct unit tests for the repro.dist subsystem: sharding rules under
+odd mesh sizes, int8 compression error bounds, and the pipeline schedule
+(bubble accounting + microbatch semantics)."""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.dist import compression, pipeline, sharding
+from repro.dist.sharding import (_fit, activation_spec, batch_specs,
+                                 cache_specs, opt_state_specs, param_specs,
+                                 set_mesh, set_rule_flags, ulysses_heads)
+from repro.launch.mesh import make_mesh
+from repro.models import init_cache, init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def fake_mesh(**shape):
+    return types.SimpleNamespace(shape=shape)
+
+
+def teardown_function(_fn=None):
+    set_mesh(None)
+    set_rule_flags(ulysses=False, dp_only=False, serve_weights=False)
+
+
+def _check_divisible(mesh, abstract, specs):
+    flat_p = jax.tree.leaves(abstract)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        for dim, axes in zip(leaf.shape, tuple(spec)):
+            if axes is None:
+                continue
+            n = 1
+            for a in (axes if isinstance(axes, tuple) else (axes,)):
+                n *= mesh.shape[a]
+            assert dim % n == 0, f"{leaf.shape} vs {spec}"
+
+
+# ---------------------------------------------------------------- sharding
+@pytest.mark.parametrize("shape", [dict(data=3, model=5),
+                                   dict(data=7, model=2),
+                                   dict(pod=3, data=2, model=9),
+                                   dict(data=1, model=1)])
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "qwen3_moe_235b", "rwkv6_3b",
+                                  "recurrentgemma_9b"])
+def test_param_specs_fit_odd_meshes(shape, arch):
+    """Every rule degrades to a dividing (or replicated) spec on meshes
+    whose sizes share no factor with the tensor dims."""
+    m = fake_mesh(**shape)
+    cfg = configs.smoke(arch)
+    abstract = jax.eval_shape(lambda k: init_params(cfg, k), KEY)
+    _check_divisible(m, abstract, param_specs(m, abstract))
+
+
+def test_fit_handles_absent_axes_and_long_specs():
+    m = fake_mesh(data=4)
+    # unknown axis drops; spec longer than rank truncates
+    assert _fit(m, P("model", "data"), (8,)) == P(None)
+    assert _fit(m, P(("data", "model")), (8,)) == P(("data",))
+    assert _fit(m, P("data"), (8, 8)) == P("data", None)
+
+
+def test_opt_state_specs_tie_moments_to_params():
+    from repro.train.optimizer import OptConfig, init_opt_state
+    m = fake_mesh(data=2, model=4)
+    cfg = configs.smoke("qwen3_0_6b")
+    params = jax.eval_shape(lambda k: init_params(cfg, k), KEY)
+    for name in ("adamw", "adafactor"):
+        opt = jax.eval_shape(
+            lambda p: init_opt_state(OptConfig(name=name), p), params)
+        specs = opt_state_specs(m, opt, params)
+        assert specs["count"] == P()
+        _check_divisible(m, opt[[k for k in opt if k != "count"][0]],
+                         specs[[k for k in specs if k != "count"][0]])
+        if name == "adafactor":
+            # collapsed factored dims (size 1) must never stay sharded
+            for leaf, spec in zip(
+                    jax.tree.leaves(opt["vr"]),
+                    jax.tree.leaves(specs["vr"],
+                                    is_leaf=lambda x: isinstance(x, P))):
+                for dim, axes in zip(leaf.shape, tuple(spec)):
+                    assert not (dim == 1 and axes is not None)
+
+
+def test_cache_specs_shard_sequence_over_model():
+    m = fake_mesh(data=2, model=4)
+    cfg = configs.smoke("qwen3_0_6b")
+    cache = jax.eval_shape(lambda: init_cache(cfg, 4, 128))
+    specs = cache_specs(m, cache)
+    _check_divisible(m, cache, specs)
+    k_spec = jax.tree.leaves(
+        cache_specs(m, {"k": jax.ShapeDtypeStruct((4, 128, 4, 32),
+                                                  jnp.bfloat16)}),
+        is_leaf=lambda x: isinstance(x, P))[0]
+    assert k_spec[1] == "model" and k_spec[0] in (("data",), "data")
+
+
+def test_cache_specs_dp_only_never_duplicates_axes():
+    """Under dp_only the batch spreads over every axis — the sequence dim
+    must not reuse `model` (NamedSharding rejects duplicate axes)."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    set_rule_flags(dp_only=True)
+    spec = jax.tree.leaves(
+        cache_specs(mesh, {"k": jax.ShapeDtypeStruct((4, 128, 4, 32),
+                                                     jnp.bfloat16)}),
+        is_leaf=lambda x: isinstance(x, P))[0]
+    jax.sharding.NamedSharding(mesh, spec)        # raises on duplicates
+    set_rule_flags(dp_only=False)
+
+
+def test_serve_weights_flag_drops_fsdp_axes():
+    m = fake_mesh(data=8, model=4)
+    cfg = configs.smoke("gemma_7b")
+    abstract = jax.eval_shape(lambda k: init_params(cfg, k), KEY)
+    set_rule_flags(serve_weights=True)
+    specs = param_specs(m, abstract)
+    for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        for axes in tuple(spec):
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            assert "data" not in axes and "pod" not in axes
+    set_rule_flags(serve_weights=False)
+
+
+def test_ulysses_flag_shards_sequence_in_batch_specs():
+    m = fake_mesh(data=2, model=4)
+    b = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+    base = jax.tree.leaves(batch_specs(m, b),
+                           is_leaf=lambda x: isinstance(x, P))[0]
+    assert base[1] is None
+    set_rule_flags(ulysses=True)
+    uly = jax.tree.leaves(batch_specs(m, b),
+                          is_leaf=lambda x: isinstance(x, P))[0]
+    assert uly[1] == "model"
+    set_rule_flags(ulysses=False)
+
+
+def test_activation_spec_odd_dims_replicate():
+    m = fake_mesh(data=3, model=5)
+    assert activation_spec(m, (9, 25, 7)) == P(("data",), "model", None)
+    assert activation_spec(m, (8, 24, 7)) == P(None, None, None)
+    set_rule_flags(dp_only=True)
+    assert activation_spec(m, (15, 25, 7)) == P(("data", "model"), None, None)
+    set_rule_flags(dp_only=False)
+
+
+def test_ulysses_heads_identity_off_mesh():
+    x = jnp.ones((2, 8, 4, 16))
+    np.testing.assert_array_equal(np.asarray(ulysses_heads(x)),
+                                  np.asarray(x))
+
+
+def test_set_rule_flags_rejects_unknown():
+    with pytest.raises(ValueError):
+        set_rule_flags(zeRO=True)
+
+
+# -------------------------------------------------------------- compression
+def test_int8_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    for scale_exp in (-3, 0, 4):
+        x = jnp.asarray(rng.standard_normal(4096) * 10.0 ** scale_exp,
+                        jnp.float32)
+        q, s = compression.quantize_int8(x)
+        assert q.dtype == jnp.int8
+        err = np.abs(np.asarray(x) - np.asarray(
+            compression.dequantize_int8(q, s)))
+        assert err.max() <= float(s) / 2 + 1e-12 * 10.0 ** scale_exp
+
+
+def test_int8_axiswise_tightens_error():
+    rng = np.random.default_rng(1)
+    # one huge row blows up the global scale; per-row scales stay tight
+    x = np.asarray(rng.standard_normal((8, 512)), np.float32)
+    x[0] *= 1000.0
+    xg = jnp.asarray(x)
+    qg, sg = compression.quantize_int8(xg)
+    qa, sa = compression.quantize_int8(xg, axis=1)
+    err_g = np.abs(x[1:] - np.asarray(compression.dequantize_int8(qg, sg))[1:])
+    err_a = np.abs(x[1:] - np.asarray(compression.dequantize_int8(qa, sa))[1:])
+    assert err_a.max() < err_g.max() / 10
+
+
+def test_int8_zero_tensor_safe():
+    q, s = compression.quantize_int8(jnp.zeros(16))
+    np.testing.assert_array_equal(
+        np.asarray(compression.dequantize_int8(q, s)), np.zeros(16))
+
+
+def test_tree_quantize_roundtrip_and_wire_bytes():
+    tree = {"w": jnp.asarray(np.random.default_rng(2)
+                             .standard_normal((64, 32)), jnp.float32),
+            "norm": jnp.ones(4, jnp.float32),
+            "step": jnp.zeros((), jnp.int32)}
+    packed = compression.quantize_tree(tree, min_size=64)
+    assert isinstance(packed["w"], dict)          # large leaf quantized
+    assert isinstance(packed["norm"], jnp.ndarray)  # small leaf exact
+    out = compression.dequantize_tree(packed)
+    assert out["w"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(tree["w"]),
+                               atol=float(packed["w"]["scale"]))
+    assert compression.wire_bytes(packed) < compression.wire_bytes(tree) / 3
+
+
+# ----------------------------------------------------------------- pipeline
+def test_bubble_accounting():
+    assert pipeline.schedule_steps(1, 4) == 4
+    assert pipeline.schedule_steps(4, 8) == 11
+    assert pipeline.bubble_stage_steps(1, 4) == 0
+    assert pipeline.bubble_stage_steps(4, 8) == 4 * 3
+    assert pipeline.bubble_fraction(1, 16) == 0.0
+    np.testing.assert_allclose(pipeline.bubble_fraction(4, 8), 3 / 11)
+    # more microbatches shrink the bubble monotonically
+    fracs = [pipeline.bubble_fraction(4, m) for m in (1, 2, 4, 16, 64)]
+    assert all(a > b for a, b in zip(fracs, fracs[1:]))
+
+
+def test_pipeline_apply_validates_microbatching():
+    mesh = make_mesh((1,), ("pod",))
+    w = jnp.ones((1, 4, 4))
+    x = jnp.ones((6, 4))
+    with pytest.raises(ValueError):
+        pipeline.pipeline_apply(lambda p, xb: xb @ p, mesh, w, x,
+                                n_microbatches=4)   # 6 % 4 != 0
+    with pytest.raises(ValueError):
+        pipeline.pipeline_apply(lambda p, xb: xb @ p, mesh,
+                                jnp.ones((3, 4, 4)), x)  # no axis of size 3
+
+
+def test_pipeline_single_stage_microbatch_counts_agree():
+    mesh = make_mesh((1,), ("pod",))
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((1, 4, 4)) * 0.5, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    outs = [pipeline.pipeline_apply(lambda p, xb: jnp.tanh(xb @ p), mesh, w,
+                                    x, n_microbatches=m) for m in (1, 2, 8)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=1e-6)

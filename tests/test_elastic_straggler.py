@@ -57,8 +57,6 @@ def test_straggler_heap_stays_readable():
 
 def test_elastic_reshard_subprocess():
     """Checkpoint on a 2x4 mesh, restore onto 4x2 and 8x1."""
-    pytest.importorskip("repro.dist.sharding",
-                        reason="repro.dist not in tree yet (pending PR)")
     env = dict(os.environ, PYTHONPATH="src")
     cwd = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     for to in ("4x2", "8x1"):

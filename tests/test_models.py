@@ -6,9 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist.sharding",
-                    reason="repro.dist not in tree yet (pending PR)")
-
 from repro import configs
 from repro.models import (decode_step, forward, init_cache, init_params,
                           loss_fn)

@@ -11,11 +11,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist.sharding",
-                    reason="repro.dist not in tree yet (pending PR)")
-
 from repro import configs
 from repro.dist.sharding import set_mesh, set_rule_flags
+from repro.launch.mesh import make_mesh
 from repro.models import (decode_step, forward, init_cache, init_params,
                           loss_fn)
 
@@ -23,8 +21,7 @@ KEY = jax.random.PRNGKey(0)
 
 
 def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def teardown_function(_fn=None):

@@ -11,15 +11,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist.pipeline",
-                    reason="repro.dist not in tree yet (pending PR)")
-
 from repro.dist.pipeline import pipeline_apply
+from repro.launch.mesh import make_mesh
 
 
 def test_single_stage_degenerate():
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",))
     w = jnp.full((1, 4, 4), 2.0)          # one stage: y = x @ 2I-ish
     x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 3, 4)),
                     jnp.float32)
@@ -34,8 +31,8 @@ def test_two_stage_pipeline_subprocess():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
         import jax, jax.numpy as jnp, numpy as np
         from repro.dist.pipeline import pipeline_apply
-        mesh = jax.make_mesh((2,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2,), ("pod",))
         rng = np.random.default_rng(0)
         W = jnp.asarray(rng.standard_normal((2, 4, 4)) * 0.5, jnp.float32)
         x = jnp.asarray(rng.standard_normal((8, 3, 4)), jnp.float32)

@@ -116,3 +116,25 @@ def test_writeback_batched_until_transfer():
     assert cl.replicator.flushes == flushes0
     cl.drust.transfer(t0, b, 1)         # visibility point -> flush
     assert cl.replicator.flushes == flushes0 + 1
+
+
+def test_mem_pressure_evicts_incrementally_to_watermark():
+    """mem>90% policy reclaims only the excess above the high-water mark
+    (CLOCK partial eviction), not every unpinned copy (the old full sweep)."""
+    cap = 1 << 20
+    cl = Cluster(2, backend="drust", partition_bytes=cap)
+    t0 = cl.main_thread(0)
+    boxes = [cl.backend.alloc(t0, 60_000, b"x" * 60_000, server=1)
+             for _ in range(16)]
+    for b in boxes:                       # cache a copy of each on server 0
+        cl.backend.read(t0, b)
+    assert cl.controller.mem_frac(0) > cl.controller.MEM_HI
+    n_before = len(cl.drust.caches[0].entries)
+    assert n_before == 16
+    cl.controller.balance(horizon_us=1e6)
+    # back under the watermark ...
+    assert cl.controller.mem_frac(0) <= cl.controller.MEM_HI + 1e-9
+    # ... but warm copies below the mark survived (incremental, not a sweep)
+    n_after = len(cl.drust.caches[0].entries)
+    assert 0 < n_after < n_before
+    assert n_after >= n_before - 2        # only the excess was reclaimed

@@ -15,8 +15,6 @@ from repro import configs
 def test_end_to_end_train_with_failure_recovery():
     """Train a reduced model, inject a failure mid-run, recover from the
     epoch backup, and still end with a lower loss than we started."""
-    pytest.importorskip("repro.dist.sharding",
-                        reason="repro.dist not in tree yet (pending PR)")
     from repro.models import init_params
     from repro.train import OptConfig, TrainState, synthetic_batches
     cfg = configs.smoke("starcoder2_3b")
@@ -37,8 +35,6 @@ def test_end_to_end_train_with_failure_recovery():
 def test_end_to_end_serve_with_online_weight_update():
     """Serve while a writer bumps the weight color: replicas refresh via the
     colored cache, requests complete, zero invalidation traffic."""
-    pytest.importorskip("repro.dist.sharding",
-                        reason="repro.dist not in tree yet (pending PR)")
     from repro.core.jaxstate import OwnedState
     from repro.models import init_params
     from repro.serve import ServeEngine
@@ -83,8 +79,6 @@ def test_dsm_and_ml_stack_share_protocol_semantics():
 
 def test_dryrun_smoke_subprocess():
     """The dry-run harness itself: 8 host devices, 2x4 mesh, reduced arch."""
-    pytest.importorskip("repro.dist.sharding",
-                        reason="repro.dist not in tree yet (pending PR)")
     import os
     env = dict(os.environ,
                DRYRUN_XLA_FLAGS="--xla_force_host_platform_device_count=8",

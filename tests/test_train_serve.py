@@ -5,9 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist.sharding",
-                    reason="repro.dist not in tree yet (pending PR)")
-
 from repro import configs
 from repro.core import BorrowError
 from repro.core.jaxstate import OwnedState, StateCache
