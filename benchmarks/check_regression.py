@@ -4,12 +4,17 @@
         [--baseline BENCH_protocol.json] [--tolerance 0.10] [--out current.json]
 
 Runs ``benchmarks/run.py --quick`` (protocol micro-benchmarks + the
-batched-I/O app sweep) and compares the *deterministic* metrics against
-the committed ``BENCH_protocol.json``:
+batched-I/O app sweep + the multi-QP sweep) and compares the
+*deterministic* metrics against the committed ``BENCH_protocol.json``:
 
   * per-app round trips and virtual makespan (batched and unbatched
     planes) — the paper's headline trajectory;
-  * protocol message counts (``proto_*_msgs`` derived values).
+  * protocol message counts (``proto_*_msgs`` derived values);
+  * the multi-QP completion plane (``qp_sweep``): virtual makespan within
+    tolerance, and the fence/ooo counters (``fences``, ``fenced_verbs``,
+    ``ooo_completions``, ``qp_switches``, ``round_trips``) pinned
+    *exactly* — they are fully deterministic, so any drift is a behavior
+    change that must be intentional (regenerate the baseline).
 
 Wall-clock microsecond columns are ignored — they are noise on shared CI
 runners; everything gated here comes from the deterministic simulator.
@@ -27,6 +32,12 @@ import sys
 
 APP_METRICS = ("round_trips", "makespan_us")
 APP_MODES = ("batched", "unbatched")
+# Deterministic completion-plane counters: pinned exactly, both directions.
+# (App round_trips stay on the 10%-tolerance path above; the qp_sweep adds
+# round_trips to the exact set because the sweep holds them constant by
+# construction.)
+APP_EXACT = ("fences", "fenced_verbs", "ooo_completions", "qp_switches")
+QP_EXACT = APP_EXACT + ("round_trips",)
 
 
 def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
@@ -48,6 +59,34 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
                         f"apps/{app}/{mode}/{metric}: {cur} vs baseline "
                         f"{base} (+{100 * (cur / base - 1):.1f}%, "
                         f"tol {100 * tolerance:.0f}%)")
+            for metric in APP_EXACT:
+                base = base_entry[mode].get(metric)
+                if base is None:
+                    continue               # pre-multi-QP baseline
+                cur = cur_entry.get(mode, {}).get(metric)
+                if cur != base:
+                    failures.append(
+                        f"apps/{app}/{mode}/{metric}: {cur} != baseline "
+                        f"{base} (deterministic counter, pinned exactly)")
+    for name, base_entry in sorted(baseline.get("qp_sweep", {}).items()):
+        cur_entry = current.get("qp_sweep", {}).get(name)
+        if cur_entry is None:
+            failures.append(f"qp_sweep/{name}: missing from current run")
+            continue
+        base, cur = base_entry["makespan_us"], cur_entry.get("makespan_us")
+        if cur is None:
+            failures.append(f"qp_sweep/{name}/makespan_us: missing")
+        elif cur > base * (1.0 + tolerance):
+            failures.append(
+                f"qp_sweep/{name}/makespan_us: {cur} vs baseline {base} "
+                f"(+{100 * (cur / base - 1):.1f}%, tol {100 * tolerance:.0f}%)")
+        for metric in QP_EXACT:
+            base = base_entry.get(metric)
+            cur = cur_entry.get(metric)
+            if cur != base:
+                failures.append(
+                    f"qp_sweep/{name}/{metric}: {cur} != baseline {base} "
+                    f"(deterministic counter, pinned exactly)")
     for name, meta in sorted(baseline.get("micro", {}).items()):
         if not name.endswith("_msgs"):
             continue                       # wall-clock rows: not gated
@@ -90,7 +129,9 @@ def main(argv=None) -> int:
             print(f"  {f_}")
         return 1
     n_gated = sum(1 for n in baseline.get("micro", {}) if n.endswith("_msgs"))
-    n_gated += len(baseline.get("apps", {})) * len(APP_MODES) * len(APP_METRICS)
+    n_gated += len(baseline.get("apps", {})) * len(APP_MODES) * (
+        len(APP_METRICS) + len(APP_EXACT))
+    n_gated += len(baseline.get("qp_sweep", {})) * (1 + len(QP_EXACT))
     print(f"bench gate OK: {n_gated} metrics within "
           f"{100 * args.tolerance:.0f}% of {args.baseline}")
     return 0

@@ -145,6 +145,49 @@ def batch_plane_sweep(n_servers: int = 8):
     return rows
 
 
+def qp_depth_sweep(qp_counts=(1, 2, 4, 8), depths=(16, 64, 224),
+                   n_servers: int = 8):
+    """QP-count × write-back-depth sweep on the out-of-order completion
+    plane (this repo's addition): ``derived`` is the makespan speedup over
+    the single-QP plane at the same depth — the NIC's per-QP message rate
+    is the serial bottleneck multi-QP striping removes.  Round trips are
+    identical at every QP count (asserted by the test suite)."""
+    from benchmarks.protocol_micro import _qp_wb_run
+    rows = []
+    for d in depths:
+        base = None
+        for q in qp_counts:
+            cl, _ = _qp_wb_run(q, d, n_servers)
+            span = cl.makespan_us()
+            if base is None:
+                base = span
+            rows.append((f"qpsweep_depth{d}_qps{q}", span,
+                         round(base / span, 3)))
+    return rows
+
+
+def link_congestion_fairness(n_servers: int = 4):
+    """All three backends under the same shared-link congestion model:
+    ``derived`` is the narrow-link (4 Gbps) / wide-link (40 Gbps) makespan
+    ratio on the dataframe trace, with the completion model (``ooo=True``,
+    2 QPs) held fixed on *both* legs so only the link width varies — the
+    fairness check that DRust's QP-sweep wins are not an artifact of
+    charging congestion to the baselines only.  (At the default 40 Gbps
+    none of these traces saturates a link; the narrow link makes the
+    capacity floor visible.)"""
+    rows = []
+    narrow = CostModel(link_bw_bytes_per_us=500.0)
+    kw = dict(n_columns=4, chunks_per_column=8, n_ops=4,
+              ooo=True, qps_per_thread=2)
+    for backend in BACKENDS:
+        plain = run_dataframe(n_servers, backend, **kw).makespan_us
+        congested = run_dataframe(n_servers, backend, cost=narrow,
+                                  **kw).makespan_us
+        rows.append((f"linkcong_dataframe_{backend}", congested,
+                     round(congested / plain, 3)))
+    return rows
+
+
 def sec73_migration():
     """§7.3: thread-migration latency (paper: ~218 us average)."""
     cl = Cluster(8, backend="drust")
@@ -160,6 +203,8 @@ def all_rows(fast: bool = False):
     rows += fig6_affinity()
     rows += fig7_coherence_cost()
     rows += batch_plane_sweep()
+    rows += qp_depth_sweep(depths=(16, 64) if fast else (16, 64, 224))
+    rows += link_congestion_fairness()
     rows += table2_deref_latency()
     rows += sec3_breakdown()
     rows += sec73_migration()

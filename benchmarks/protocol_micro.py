@@ -10,6 +10,11 @@ round-trips and makespan for TBox group fetches (group size sweep), batched
 remote reads (server count sweep), and pipelined write-backs (depth sweep),
 each against the equivalent unbatched op sequence with identical final
 heap/cache state.
+
+The multi-QP sweeps (``qp_writeback_sweep``/``qp_readmany_sweep``) measure
+the out-of-order completion plane: makespan vs QP count at 8 servers, with
+round trips held constant — the NIC's per-QP message rate is the serial
+bottleneck that striping doorbells across QPs removes.
 """
 
 from __future__ import annotations
@@ -127,6 +132,96 @@ def writeback_depth_sweep(depths=(1, 8, 64)):
     return rows
 
 
+def _qp_wb_run(qps: int, depth: int, n_servers: int = 8,
+               mixed_sizes: bool = False):
+    """One multi-QP write-back trace: a writer on server 0 retires mutable
+    borrows of ``depth`` objects owned across the other servers; each drop
+    posts an async 8 B owner write-back.  ``mixed_sizes`` first posts a
+    burst of 16 KiB stack write-backs (D.1) — those backlog the QPs they
+    land on, so the small verbs striped onto sibling QPs complete out of
+    order.  Ends with an ownership transfer so the completion-id fence path
+    runs.  Returns (cluster, writer)."""
+    cl = Cluster(n_servers, backend="drust", ooo=True, qps_per_thread=qps)
+    t0 = cl.main_thread(0)
+    owners = []
+    for s in range(1, n_servers):
+        th = cl.main_thread(0)
+        th.server = s
+        owners.append(th)
+    boxes = []
+    for i in range(depth):
+        th = owners[i % len(owners)]
+        b = cl.backend.alloc(th, 64, i)          # owner slot lives remotely
+        cl.backend.write(t0, b, 0)               # move payload to the writer
+        boxes.append(b)
+    cl.sim.reset()                               # measure only the wb phase
+    for th in owners + [t0]:
+        th.t_us = 0.0
+    if mixed_sizes:                              # D.1 stack write-back burst
+        for j in range(3):
+            cl.sim.wb.post(t0, 1 + j % (n_servers - 1), 16384)
+    for i, b in enumerate(boxes):
+        cl.backend.write(t0, b, i)               # local write + async 8B wb
+    cl.drust.transfer(t0, boxes[0], 1)           # fence only boxes[0]'s cids
+    return cl, t0
+
+
+def qp_writeback_sweep(qp_counts=(1, 2, 4), depths=(8, 56), n_servers=8):
+    """Multi-QP out-of-order completion plane: with one QP the NIC's per-QP
+    message rate serializes the write-back completion tail; striping the
+    doorbells across QPs overlaps it.  Round trips stay constant (only the
+    trailing transfer is synchronous) — the makespan is what moves."""
+    rows = []
+    for d in depths:
+        for q in qp_counts:
+            cl, t0 = _qp_wb_run(q, d, n_servers)
+            net = cl.sim.net
+            rows.append((f"qp{q}_wbdepth{d}_makespan", cl.makespan_us(),
+                         net.round_trips))
+            rows.append((f"qp{q}_wbdepth{d}_ooo", 0.0, net.ooo_completions))
+            rows.append((f"qp{q}_wbdepth{d}_fenced", 0.0, net.fenced_verbs))
+    return rows
+
+
+def qp_readmany_sweep(qp_counts=(1, 2, 4, 8), n_objects=56, n_servers=8):
+    """Sync doorbell path under the out-of-order plane: one batched read of
+    ``n_objects`` spread over the other servers.  One QP serializes the
+    per-doorbell WQE processing; multiple QPs overlap the doorbells again
+    (round trips: one per source server, identical at every QP count)."""
+    rows = []
+    for q in qp_counts:
+        cl = Cluster(n_servers, backend="drust", ooo=True, qps_per_thread=q)
+        t0 = cl.main_thread(n_servers - 1)
+        boxes = [cl.backend.alloc(t0, 256, b"x" * 256, server=i % (n_servers - 1))
+                 for i in range(n_objects)]
+        cl.sim.reset()
+        t0.t_us = 0.0
+        cl.backend.read_many(t0, boxes)
+        rows.append((f"qp{q}_readmany_makespan", cl.makespan_us(),
+                     cl.sim.net.round_trips))
+    return rows
+
+
+def qp_sweep_summary(qp_counts=(1, 2, 4), depths=(8, 56)) -> dict:
+    """Deterministic multi-QP trajectory for ``BENCH_protocol.json`` — every
+    value here comes from the virtual clock / message counters, so the
+    regression gate can pin them exactly."""
+    out = {}
+    for d in depths:
+        for q in qp_counts:
+            cl, _ = _qp_wb_run(q, d, mixed_sizes=True)
+            net = cl.sim.net
+            out[f"qps{q}_depth{d}"] = {
+                "makespan_us": round(cl.makespan_us(), 3),
+                "round_trips": net.round_trips,
+                "ooo_completions": net.ooo_completions,
+                "fences": net.fences,
+                "fenced_verbs": net.fenced_verbs,
+                "qp_switches": net.qp_switches,
+            }
+    return out
+
+
 def clone_fastpath_guard(n_elems: int = 4096, reps: int = 30):
     """Microbenchmark guard for ``ownership._clone``: flat scalar containers
     must take the shallow fast path, not ``deepcopy``.  ``derived`` is the
@@ -161,6 +256,8 @@ def all_rows():
     rows += group_fetch_sweep()
     rows += read_many_sweep()
     rows += writeback_depth_sweep()
+    rows += qp_writeback_sweep()
+    rows += qp_readmany_sweep()
     rows += clone_fastpath_guard()
     return rows
 

@@ -25,6 +25,9 @@ def quick(out_path: str = "BENCH_protocol.json") -> dict:
         "micro": {name: {"us": round(us, 3), "derived": derived}
                   for name, us, derived in rows},
         "apps": {},
+        # Multi-QP / out-of-order completion plane trajectory: makespan plus
+        # the deterministic fence/ooo counters, pinned by the gate.
+        "qp_sweep": protocol_micro.qp_sweep_summary(),
     }
     for app, fn, kw in (
         ("socialnet", run_socialnet, dict(n_requests=120)),
@@ -41,6 +44,10 @@ def quick(out_path: str = "BENCH_protocol.json") -> dict:
                 "doorbell_batches": r.net["doorbell_batches"],
                 "batched_verbs": r.net["batched_verbs"],
                 "async_writebacks": r.net["async_writebacks"],
+                "fences": r.net["fences"],
+                "fenced_verbs": r.net["fenced_verbs"],
+                "ooo_completions": r.net["ooo_completions"],
+                "qp_switches": r.net["qp_switches"],
             }
         entry["rtt_ratio"] = round(
             entry["unbatched"]["round_trips"]
@@ -59,6 +66,9 @@ def main() -> None:
             print(f"{name},{meta['us']:.2f},{meta['derived']}")
         for app, entry in summary["apps"].items():
             print(f"quick_{app}_rtt_ratio,0.00,{entry['rtt_ratio']}")
+        for name, meta in summary["qp_sweep"].items():
+            print(f"quick_qp_{name},{meta['makespan_us']:.2f},"
+                  f"{meta['ooo_completions']}")
         print("wrote BENCH_protocol.json", file=sys.stderr)
         return
 

@@ -18,7 +18,9 @@ Affinity annotations (§4.1.3, Fig. 6):
 per-operation chunk scans through the doorbell-coalesced I/O plane (one
 fetch round per source server instead of one verb per entry/chunk);
 ``batch_io=False`` keeps the legacy per-object path with identical final
-heap/cache state.
+heap/cache state.  ``qps_per_thread``/``ooo``/``cost`` select the
+completion model (multi-QP out-of-order plane vs the legacy in-order
+plane; see ``core/net.py``).
 """
 
 from __future__ import annotations
@@ -38,10 +40,12 @@ def run_dataframe(n_servers: int, backend: str = "drust",
                   probes: int = 4, workers_per_server: int = 4,
                   cores: int = 16, use_tbox: bool = False,
                   use_spawn_to: bool = False, batch_io: bool = True,
-                  seed: int = 0) -> AppResult:
+                  qps_per_thread: int = 1, ooo: bool = False,
+                  cost=None, seed: int = 0) -> AppResult:
     use_tbox = use_tbox and backend == "drust"
     use_spawn_to = use_spawn_to and backend == "drust"
-    cl = make_cluster(n_servers, backend, cores, batch_io=batch_io)
+    cl = make_cluster(n_servers, backend, cores, batch_io=batch_io,
+                      qps_per_thread=qps_per_thread, ooo=ooo, cost=cost)
     rng = np.random.default_rng(seed)
     chunk_bytes = chunk_rows * 8
     chunk_cycles = CYCLES_PER_BYTE * chunk_bytes / SIMD_LANES

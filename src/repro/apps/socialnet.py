@@ -13,6 +13,8 @@ whole batch of referenced payloads through the doorbell-coalesced I/O plane
 (one fetch round per source server per drain instead of one verb per
 request); ``batch_io=False`` keeps the legacy per-object path — protocol
 state ends up identical either way, only the verb accounting coalesces.
+``qps_per_thread``/``ooo``/``cost`` select the completion model (multi-QP
+out-of-order plane vs the legacy in-order plane; see ``core/net.py``).
 """
 
 from __future__ import annotations
@@ -34,8 +36,10 @@ def run_socialnet(n_servers: int, backend: str = "drust",
                   n_requests: int = 400, media_frac: float = 0.25,
                   workers_per_server: int = 4, cores: int = 16,
                   by_value: bool = False, batch_io: bool = True,
-                  seed: int = 0) -> AppResult:
-    cl = make_cluster(n_servers, backend, cores, batch_io=batch_io)
+                  qps_per_thread: int = 1, ooo: bool = False,
+                  cost=None, seed: int = 0) -> AppResult:
+    cl = make_cluster(n_servers, backend, cores, batch_io=batch_io,
+                      qps_per_thread=qps_per_thread, ooo=ooo, cost=cost)
     rng = np.random.default_rng(seed)
     boot = cl.main_thread(0)
 

@@ -98,10 +98,11 @@ class GamBackend:
             d.state = "S"
             d.sharers.add(d.owner)
             d.owner = None
-        lat = (self.COLD_READ_BASE_US * (0.6 + 0.4 * hops)
-               + sim.cost.xfer_us(h.size)
-               + self.PER_BLOCK_US * (self._nblocks(h) - 1))
-        th.t_us += lat
+        # wire_done: same shared-link congestion model as DRust's plane (the
+        # block payload occupies the home server's link under ooo).
+        base = self.COLD_READ_BASE_US * (0.6 + 0.4 * hops)
+        th.t_us = (sim.wire_done(th.t_us + base, h.home, h.size)
+                   + self.PER_BLOCK_US * (self._nblocks(h) - 1))
         sim.net.two_sided_msgs += 2 * hops
         sim.net.round_trips += hops
         sim.net.bytes_moved += h.size
@@ -120,12 +121,13 @@ class GamBackend:
             return
         # Request exclusive: home invalidates every sharer, then grants M.
         sharers = d.sharers - {th.server}
-        lat = (self.COLD_READ_BASE_US + sim.cost.xfer_us(h.size)
-               + self.PER_BLOCK_US * (self._nblocks(h) - 1))
+        th.t_us = (sim.wire_done(th.t_us + self.COLD_READ_BASE_US, h.home,
+                                 h.size)
+                   + self.PER_BLOCK_US * (self._nblocks(h) - 1))
         if sharers:
             # invalidation round: parallel sends, serial ACK processing
-            lat += sim.cost.two_sided_rtt_us + self.INV_PROC_US * len(sharers)
-        th.t_us += lat
+            th.t_us += (sim.cost.two_sided_rtt_us
+                        + self.INV_PROC_US * len(sharers))
         sim.net.two_sided_msgs += 2 + 2 * len(sharers)
         sim.net.round_trips += 1 + (1 if sharers else 0)
         sim.net.invalidations += len(sharers)
@@ -179,11 +181,10 @@ class GamBackend:
                     d.owner = None
                 blocks += self._nblocks(h)
                 nbytes += h.size
-            lat = (self.COLD_READ_BASE_US * (0.6 + 0.4 * max_hops)
-                   + sim.cost.xfer_us(nbytes)
-                   + self.PER_BLOCK_US * (blocks - 1)
-                   + sim.cost.doorbell_us * (len(idxs) - 1))
-            th.t_us += lat
+            base = self.COLD_READ_BASE_US * (0.6 + 0.4 * max_hops)
+            th.t_us = (sim.wire_done(th.t_us + base, home, nbytes)
+                       + self.PER_BLOCK_US * (blocks - 1)
+                       + sim.cost.doorbell_us * (len(idxs) - 1))
             sim.net.two_sided_msgs += 2 * max_hops
             sim.net.round_trips += max_hops
             sim.net.doorbell_batches += 1
@@ -268,13 +269,19 @@ class GrappaBackend:
             per_back = nbytes_back // nsegs
             one_way = sim.cost.two_sided_rtt_us / 2
             for seg in range(nsegs):
-                arrive = th.t_us + one_way + sim.cost.xfer_us(64 + per_out)
+                # request leg converges on (and may congest) the home's link
+                arrive = sim.wire_done(th.t_us + one_way, h.home,
+                                       64 + per_out)
                 start = arrive
                 if mutates:
                     start = max(arrive, self._release_t.get(h.raw, 0.0))
                 done = start + proc
                 if mutates:
                     self._release_t[h.raw] = done
+                # Response leg departs after home processing — charging it to
+                # the shared link would smear the home-core serialization into
+                # the link's busy-until and over-delay unrelated traffic; the
+                # small response rides uncongested.
                 th.t_us = done + one_way + sim.cost.xfer_us(16 + per_back)
                 sim.net.two_sided_msgs += 2
                 sim.net.round_trips += 1
@@ -313,9 +320,8 @@ class GrappaBackend:
                         for i in idxs)
             nbytes = sum(handles[i].size for i in idxs)
             proc = sim.cost.delegation_proc_us * nsegs
-            lat = (sim.cost.two_sided_rtt_us
-                   + sim.cost.xfer_us(80 * nsegs + nbytes) + proc)
-            th.t_us += lat
+            th.t_us = (sim.wire_done(th.t_us + sim.cost.two_sided_rtt_us,
+                                     home, 80 * nsegs + nbytes) + proc)
             sim.net.two_sided_msgs += 2
             sim.net.round_trips += 1
             sim.net.doorbell_batches += 1

@@ -21,24 +21,66 @@ Two mechanisms take verbs off the per-object critical path:
 * ``IOBatch`` (``Sim.batch()``) — *doorbell coalescing*: N one-sided verbs
   posted to the same destination in one doorbell ring cost ONE base latency
   plus the summed bandwidth terms plus a small per-verb issue cost
-  (``doorbell_us``).  Doorbells to *different* servers overlap in flight, so
-  the thread pays the max per-server latency, not the sum.  Counting:
-  ``one_sided_reads``/``one_sided_writes`` and ``round_trips`` tick once per
-  doorbell (one completion polled), ``batched_verbs`` counts the coalesced
-  scatter/gather elements, ``doorbell_batches`` the rings.  This is how TBox
-  affinity groups (§4.1.3) are fetched as one transfer.
+  (``doorbell_us``).  Counting: ``one_sided_reads``/``one_sided_writes`` and
+  ``round_trips`` tick once per doorbell (one completion polled),
+  ``batched_verbs`` counts the coalesced scatter/gather elements,
+  ``doorbell_batches`` the rings.  This is how TBox affinity groups (§4.1.3)
+  are fetched as one transfer.
 
 * ``WritebackQueue`` (``Sim.wb``) — *async write-back pipelining*: posted
   WRITEs (e.g. DropMutRef's 8-byte owner write-back) charge only the issue
-  cost (``wb_issue_us``) to the poster; the verb's completion time is
-  tracked per destination (bandwidth-serialized) and surfaces either at an
-  explicit ``drain()`` (a synchronization point, e.g. ownership transfer)
-  or in ``makespan_us`` — the cost is real, just off the critical path.
+  cost (``wb_issue_us``) to the poster; the verb's completion is tracked and
+  surfaces either at a fence (a synchronization point, e.g. ownership
+  transfer) or in ``makespan_us`` — the cost is real, just off the critical
+  path.
+
+Multi-QP completion plane
+-------------------------
+Every posted verb draws a cluster-wide monotone **completion id** from
+``Sim.next_cid()``.  How its completion *time* is computed depends on the
+completion model:
+
+* ``ooo=False`` (default) — the PR-1 legacy model: write-backs complete in
+  post order per destination (one bandwidth-serialized wire per destination
+  server), doorbells to distinct servers overlap.  This path reproduces the
+  PR-1 plane exactly: byte-identical message/byte counters and virtual
+  times equal to float-ulp level (pinned against golden PR-1 values by
+  ``tests/test_net_invariants.py``).
+
+* ``ooo=True`` — NIC-grade out-of-order completions.  Each thread owns
+  ``qps_per_thread`` queue pairs; verbs/doorbells stripe round-robin across
+  them (``qp_switches`` counts rings on a different QP than the last, at
+  ``qp_switch_us`` CPU each).  Three deterministic serialization constraints
+  shape every completion time:
+
+    1. *per-QP engine*: a QP's WQEs are processed in order — each verb
+       occupies the engine for ``max(bandwidth term, qp_msg_us)`` (the
+       NIC's per-QP message-rate limit) before the next may start;
+    2. *per-QP CQ order*: an RC QP's completions are strictly ordered, so a
+       verb's completion time is floored by the QP's previous completion;
+    3. *shared-link congestion*: all QPs of all threads share the
+       destination server's link (bandwidth ``link_bw_bytes_per_us``) —
+       every transfer's occupancy accumulates per server and a saturated
+       link floors the makespan exactly like a saturated CPU
+       (``Sim.link_xfer`` explains why it is capacity accounting rather
+       than a busy-until queue).
+
+  Completions of *different* QPs carry no ordering: a verb may complete
+  before an earlier-posted verb on a sibling QP (``ooo_completions`` counts
+  these inversions per posting thread).
+
+Fences wait on **completion ids**, not queues: ``fence(th, upto_id)`` blocks
+``th`` until every still-pending verb with ``cid <= upto_id`` has completed
+(a CQ-order fence may over-wait on unrelated earlier verbs — that is what a
+cid fence means); ``fence_all(th)`` fences the entire pending window.  An
+ownership transfer fences only the ids it actually depends on (the
+write-backs recorded on the transferred box), leaving later verbs in flight.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from dataclasses import dataclass, field
 
 
@@ -60,9 +102,18 @@ class CostModel:
     hashmap_us: float = 0.05            # cache hashmap lookup/insert
     doorbell_us: float = 0.08           # per-verb issue cost inside a doorbell
     wb_issue_us: float = 0.15           # post an async write-back (no wait)
+    # Multi-QP completion plane (ooo=True only).
+    link_bw_bytes_per_us: float = 5000.0  # shared per-server link (NIC port)
+    qp_msg_us: float = 0.5              # per-QP WQE engine occupancy per verb
+    #   (the NIC's per-QP message-rate limit, ~2 M verbs/s: the reason
+    #    multi-QP raises small-verb throughput even when bandwidth is idle)
+    qp_switch_us: float = 0.02          # ring a doorbell on a different QP
 
     def xfer_us(self, nbytes: int) -> float:
         return nbytes / self.bw_bytes_per_us
+
+    def link_xfer_us(self, nbytes: int) -> float:
+        return nbytes / self.link_bw_bytes_per_us
 
     def cycles_us(self, cycles: float) -> float:
         return cycles / (self.ghz * 1e3)
@@ -71,6 +122,7 @@ class CostModel:
 @dataclass
 class ServerStats:
     cpu_busy_us: float = 0.0            # CPU time consumed on this server
+    link_busy_us: float = 0.0           # shared-link occupancy (ooo model)
     bytes_in: int = 0
     bytes_out: int = 0
     msgs: int = 0
@@ -89,7 +141,11 @@ class NetStats:
     round_trips: int = 0                # critical-path completions waited on
     doorbell_batches: int = 0           # doorbell rings (>= 1 verb each)
     batched_verbs: int = 0              # scatter/gather elements coalesced
-    wb_drains: int = 0                  # write-back queue fences
+    wb_drains: int = 0                  # fences that retired >= 1 verb
+    fences: int = 0                     # fence/fence_all calls issued
+    fenced_verbs: int = 0               # verbs retired by a completion fence
+    ooo_completions: int = 0            # completions beating an earlier cid
+    qp_switches: int = 0                # doorbell rung on a different QP
 
     def total_msgs(self) -> int:
         return (self.one_sided_reads + self.one_sided_writes
@@ -102,13 +158,27 @@ class NetStats:
         return self.total_msgs() - self.async_msgs - self.async_writebacks
 
 
+@dataclass
+class _Verb:
+    """A posted-but-not-retired one-sided verb on the completion plane."""
+    cid: int
+    tid: int
+    dst: int
+    nbytes: int
+    done_us: float
+
+
 class IOBatch:
     """Doorbell-coalesced one-sided verbs (see module docstring).
 
     Verbs are staged with ``add_read``/``add_write`` and charged at
     ``commit(th)``: one base latency per (server, direction) doorbell plus
-    summed bandwidth terms; doorbells to distinct servers overlap (thread
-    pays the max), per-verb issue cost is additive.
+    summed bandwidth terms, per-verb issue cost additive.  Under the legacy
+    completion model doorbells to distinct servers overlap (thread pays the
+    max); under ``ooo=True`` the doorbells stripe round-robin across the
+    thread's QPs — same-QP doorbells serialize on the QP engine, sibling-QP
+    doorbells overlap, and every transfer serializes on the destination's
+    shared link.
     """
 
     __slots__ = ("sim", "reads", "writes")
@@ -132,37 +202,62 @@ class IOBatch:
         return (sum(len(v) for v in self.reads.values())
                 + sum(len(v) for v in self.writes.values()))
 
+    def _count_doorbell(self, th, server: int, sizes: list[int],
+                        is_read: bool) -> int:
+        """Message/byte accounting for one doorbell (identical under both
+        completion models); returns the doorbell's total byte count."""
+        net, sim = self.sim.net, self.sim
+        total = sum(sizes)
+        for _ in sizes:
+            sim.next_cid()               # every coalesced verb draws a cid
+        if is_read:
+            net.one_sided_reads += 1
+            sim.servers[server].bytes_out += total
+            sim.servers[th.server].bytes_in += total
+        else:
+            net.one_sided_writes += 1
+            sim.servers[server].bytes_in += total
+            sim.servers[th.server].bytes_out += total
+        net.doorbell_batches += 1
+        net.batched_verbs += len(sizes)
+        net.round_trips += 1
+        net.bytes_moved += total
+        return total
+
     def commit(self, th) -> float:
         """Ring every doorbell; returns the critical-path latency charged."""
         if self.empty:
             return 0.0
-        sim, cost, net = self.sim, self.sim.cost, self.sim.net
-        issue = 0.0                      # CPU posts every WQE serially
-        inflight = 0.0                   # doorbells to distinct QPs overlap
-        for server, sizes in self.reads.items():
-            total = sum(sizes)
-            issue += cost.doorbell_us * len(sizes)
-            inflight = max(inflight, cost.one_sided_base_us + cost.xfer_us(total))
-            net.one_sided_reads += 1
-            net.doorbell_batches += 1
-            net.batched_verbs += len(sizes)
-            net.round_trips += 1
-            net.bytes_moved += total
-            sim.servers[server].bytes_out += total
-            sim.servers[th.server].bytes_in += total
-        for server, sizes in self.writes.items():
-            total = sum(sizes)
-            issue += cost.doorbell_us * len(sizes)
-            inflight = max(inflight, cost.one_sided_base_us + cost.xfer_us(total))
-            net.one_sided_writes += 1
-            net.doorbell_batches += 1
-            net.batched_verbs += len(sizes)
-            net.round_trips += 1
-            net.bytes_moved += total
-            sim.servers[server].bytes_in += total
-            sim.servers[th.server].bytes_out += total
-        lat = issue + inflight
-        th.t_us += lat
+        sim, cost = self.sim, self.sim.cost
+        if not sim.ooo:                  # legacy plane: PR-1 arithmetic
+            issue = 0.0                  # CPU posts every WQE serially
+            inflight = 0.0               # doorbells to distinct QPs overlap
+            for server, sizes in self.reads.items():
+                total = self._count_doorbell(th, server, sizes, is_read=True)
+                issue += cost.doorbell_us * len(sizes)
+                inflight = max(inflight,
+                               cost.one_sided_base_us + cost.xfer_us(total))
+            for server, sizes in self.writes.items():
+                total = self._count_doorbell(th, server, sizes, is_read=False)
+                issue += cost.doorbell_us * len(sizes)
+                inflight = max(inflight,
+                               cost.one_sided_base_us + cost.xfer_us(total))
+            lat = issue + inflight
+            th.t_us += lat
+        else:                            # multi-QP out-of-order plane
+            t0 = th.t_us
+            dones: list[float] = []
+            doorbells = ([(s, sz, True) for s, sz in self.reads.items()]
+                         + [(s, sz, False) for s, sz in self.writes.items()])
+            for server, sizes, is_read in doorbells:
+                total = self._count_doorbell(th, server, sizes, is_read)
+                th.t_us += cost.doorbell_us * len(sizes)    # serial WQE posts
+                done = sim.qp_complete(th, server, total, n_verbs=len(sizes))
+                if dones and done < max(dones):
+                    sim.net.ooo_completions += 1
+                dones.append(done)
+            th.t_us = max(th.t_us, max(dones))   # sync commit: poll all CQs
+            lat = th.t_us - t0
         self.reads.clear()
         self.writes.clear()
         return lat
@@ -171,66 +266,185 @@ class IOBatch:
 class WritebackQueue:
     """Pipelined one-sided WRITEs charged off the critical path.
 
-    ``post`` charges only the issue cost to the posting thread; the verb's
-    completion is modeled per destination (bandwidth-serialized per QP) and
-    must be waited on at synchronization points via ``drain`` — otherwise it
+    ``post`` charges only the issue cost to the posting thread and returns
+    the verb's **completion id**; the completion time comes from the active
+    completion model (see module docstring).  Synchronization points wait on
+    specific ids via ``fence``/``fence_all`` — anything never fenced
     surfaces as a floor on ``Sim.makespan_us``.
     """
 
     def __init__(self, sim: "Sim"):
         self.sim = sim
-        self._bw_tail: dict[int, float] = {}     # dst -> wire busy-until time
-        self._tail: dict[int, float] = {}        # poster tid -> last completion
+        self._bw_tail: dict[int, float] = {}     # legacy: dst -> wire busy-until
+        self._pending: dict[int, _Verb] = {}     # cid -> verb, insertion = cid order
+        self._retired: dict[int, float] = {}     # fenced cid -> completion time
+        self._retired_hi = (0, 0.0)  # (highest retired cid, max retired done)
+        self._tid_maxdone: dict[int, float] = {}  # max pending done per tid
+        self._retired_floor = 0.0    # makespan floor from forgotten threads
+        self._max_cid = 0            # highest cid ever posted on this queue
         self.posted = 0
 
-    def post(self, th, dst_server: int, nbytes: int) -> None:
+    # ---- post ----------------------------------------------------------
+    def post(self, th, dst_server: int, nbytes: int) -> int:
+        """Post an async WRITE; returns its completion id."""
         sim, cost, net = self.sim, self.sim.cost, self.sim.net
         th.t_us += cost.wb_issue_us
-        # In-flight WRITEs overlap their base latencies (deep NIC queue);
-        # only the bandwidth term serializes per destination link.
-        # Completion is tracked per *posting thread*: a fence orders a
-        # thread's own prior write-backs, not other threads' traffic.
-        wire = max(th.t_us, self._bw_tail.get(dst_server, 0.0)) + cost.xfer_us(nbytes)
-        self._bw_tail[dst_server] = wire
-        done = wire + cost.one_sided_base_us
         tid = getattr(th, "tid", 0)
-        self._tail[tid] = max(self._tail.get(tid, 0.0), done)
+        cid = sim.next_cid()
+        if not sim.ooo:
+            # Legacy (PR-1) completion model: in-flight WRITEs overlap their
+            # base latencies (deep NIC queue); only the bandwidth term
+            # serializes per destination link, completions surface in post
+            # order per destination.
+            wire = (max(th.t_us, self._bw_tail.get(dst_server, 0.0))
+                    + cost.xfer_us(nbytes))
+            self._bw_tail[dst_server] = wire
+            done = wire + cost.one_sided_base_us
+        else:
+            done = sim.qp_complete(th, dst_server, nbytes)
+            # Out-of-order completion: this verb beats an earlier-posted,
+            # still-pending verb of the same thread (on a sibling QP).
+            prior_max = self._pending_maxdone(tid)
+            if prior_max > done:
+                net.ooo_completions += 1
+            self._tid_maxdone[tid] = max(prior_max, done)
+        self._pending[cid] = _Verb(cid, tid, dst_server, nbytes, done)
+        self._max_cid = cid
         self.posted += 1
         net.one_sided_writes += 1
         net.async_writebacks += 1
         net.bytes_moved += nbytes
         sim.servers[dst_server].bytes_in += nbytes
         sim.servers[th.server].bytes_out += nbytes
+        return cid
 
+    # ---- fences --------------------------------------------------------
     @property
     def pending_completion_us(self) -> float:
-        return max(self._tail.values(), default=0.0)
+        t = max((v.done_us for v in self._pending.values()), default=0.0)
+        return max(t, self._retired_floor)
 
-    def drain(self, th) -> float:
-        """Fence: block ``th`` until every write-back *it posted* has
-        completed (program-order fence; other threads' traffic is not
-        charged to this thread)."""
-        t = self._tail.pop(getattr(th, "tid", 0), None)
-        if t is None:
-            return 0.0
+    def _pending_maxdone(self, tid: int) -> float:
+        """Max completion time among ``tid``'s pending verbs — incrementally
+        maintained on post, invalidated when a fence/forget removes the
+        thread's verbs, recomputed lazily (keeps the inversion check O(1)
+        per post instead of a pending-set scan)."""
+        cached = self._tid_maxdone.get(tid)
+        if cached is None:
+            cached = max((v.done_us for v in self._pending.values()
+                          if v.tid == tid), default=0.0)
+            self._tid_maxdone[tid] = cached
+        return cached
+
+    def _retire(self, cid: int, done_us: float) -> None:
+        self._retired[cid] = done_us
+        hi_cid, hi_done = self._retired_hi
+        self._retired_hi = (max(hi_cid, cid), max(hi_done, done_us))
+
+    def _retired_before(self, upto_id: int) -> float:
+        """Max completion time among retired cids <= upto_id.  O(1) when the
+        fence covers the whole retirement frontier (the common case — new
+        fences use fresh, higher cids); the scan only runs for a fence
+        scoped below an already-retired cid."""
+        hi_cid, hi_done = self._retired_hi
+        if upto_id >= hi_cid:
+            return hi_done
+        return max((d for c, d in self._retired.items() if c <= upto_id),
+                   default=0.0)
+
+    def fence(self, th, upto_id: int) -> float:
+        """Completion-id fence: block ``th`` until every verb with
+        ``cid <= upto_id`` has completed.  Pending verbs in that range
+        retire; verbs another thread's fence already retired still gate
+        ``th`` — their completion *times* are kept in ``_retired`` so a
+        dependent fence waits even when it is not the first to poll the
+        cid (otherwise an ownership transfer could ship before a
+        write-back another thread happened to sweep).  Verbs posted after
+        ``upto_id`` stay in flight — a transfer waits only on the ids it
+        depends on."""
+        net = self.sim.net
+        net.fences += 1
+        take = [v for v in self._pending.values() if v.cid <= upto_id]
+        t = max((v.done_us for v in take), default=0.0)
+        t = max(t, self._retired_before(upto_id))
         if t > th.t_us:
             th.t_us = t
-        self.sim.net.wb_drains += 1
-        if not self._tail:
+        if not take:
+            return t
+        for v in take:
+            del self._pending[v.cid]
+            self._retire(v.cid, v.done_us)
+            self._tid_maxdone.pop(v.tid, None)   # recomputed on next post
+        net.fenced_verbs += len(take)
+        net.wb_drains += 1
+        if not self._pending:
             self._bw_tail.clear()
         return t
 
+    def fence_all(self, th) -> float:
+        """Fence the whole cid window ever posted (full barrier)."""
+        return self.fence(th, self._max_cid)
+
+    # Backward-compatible name for the PR-1 full drain.
+    drain = fence_all
+
+    # ---- epoch / thread lifecycle --------------------------------------
+    def forget(self, tid: int) -> int:
+        """A thread retired: drop its per-thread completion state (QP rings,
+        pending-verb tracking).  The retired verbs' cost is not lost — their
+        completion times move to the retired-cid record (cids are globally
+        unique, so this cannot pollute a reused thread id; a *dependent*
+        fence on those cids still waits) and their latest completion is a
+        makespan floor.  A rescale that wants a fully clean slate ends the
+        epoch via ``Sim.snapshot()``/``Sim.reset()`` after retiring."""
+        mine = [v for v in self._pending.values() if v.tid == tid]
+        for v in mine:
+            self._retired_floor = max(self._retired_floor, v.done_us)
+            self._retire(v.cid, v.done_us)
+            del self._pending[v.cid]
+        self._tid_maxdone.pop(tid, None)
+        if not self._pending:
+            self._bw_tail.clear()
+        self.sim._forget_tid(tid)
+        return len(mine)
+
+    def end_epoch(self) -> None:
+        """End an observation epoch (``Sim.snapshot()``/``Sim.reset()``):
+        clear every per-thread tail — pending verbs, legacy per-destination
+        wires, QP state, and the retired-thread floor — so reused thread ids
+        in a later epoch (elastic rescale) start clean."""
+        self._pending.clear()
+        self._bw_tail.clear()
+        self._retired.clear()
+        self._retired_hi = (0, 0.0)
+        self._retired_floor = 0.0
+        self._tid_maxdone.clear()
+        self.sim._clear_qp_state()
+
 
 class Sim:
-    """Virtual-time cluster: per-server stats, per-thread clocks (on Thread)."""
+    """Virtual-time cluster: per-server stats, per-thread clocks (on Thread).
+
+    ``qps_per_thread``/``ooo`` select the completion model (module
+    docstring): the defaults reproduce the PR-1 plane exactly; ``ooo=True``
+    enables per-verb out-of-order completions over ``qps_per_thread`` queue
+    pairs per thread with shared-link congestion.
+    """
 
     def __init__(self, n_servers: int, cores_per_server: int = 16,
-                 cost: CostModel | None = None):
+                 cost: CostModel | None = None, qps_per_thread: int = 1,
+                 ooo: bool = False):
         self.n = n_servers
         self.cores = cores_per_server
         self.cost = cost or CostModel()
+        self.qps = max(1, int(qps_per_thread))
+        self.ooo = bool(ooo)
         self.servers = [ServerStats() for _ in range(n_servers)]
         self.net = NetStats()
+        self._cids = itertools.count(1)          # cluster-wide completion ids
+        self._qp_rr: dict[int, int] = {}         # tid -> last QP index rung
+        self._qp_tail: dict[tuple[int, int], float] = {}  # (tid,qp) -> engine
+        self._qp_done: dict[tuple[int, int], float] = {}  # (tid,qp) -> last CQE
         self.wb = WritebackQueue(self)
         # straggler model: per-server compute slowdown (thermal throttling,
         # noisy neighbours, failing DIMMs...).  1.0 = healthy.
@@ -241,6 +455,76 @@ class Sim:
 
     def degrade(self, server: int, factor: float) -> None:
         self.slowdown[server] = factor
+
+    # ---- completion plane primitives -----------------------------------
+    def next_cid(self) -> int:
+        return next(self._cids)
+
+    def select_qp(self, th) -> tuple[int, int]:
+        """Round-robin QP pick for ``th``'s next doorbell; charges the QP
+        switch cost when the ring differs from the thread's previous one."""
+        tid = getattr(th, "tid", 0)
+        prev = self._qp_rr.get(tid)
+        qp = 0 if prev is None else (prev + 1) % self.qps
+        self._qp_rr[tid] = qp
+        if prev is not None and qp != prev:
+            self.net.qp_switches += 1
+            th.t_us += self.cost.qp_switch_us
+        return (tid, qp)
+
+    def qp_complete(self, th, server: int, nbytes: int,
+                    n_verbs: int = 1) -> float:
+        """Run one doorbell (``n_verbs`` coalesced WQEs, ``nbytes`` total)
+        through the out-of-order completion model: pick the thread's next
+        QP, serialize on its engine (bandwidth- or message-rate-limited),
+        charge the shared link, add base latency, and floor by the QP's
+        in-order CQ.  Returns the completion time; only the ``ooo=True``
+        paths call this."""
+        cost = self.cost
+        key = self.select_qp(th)
+        start = max(th.t_us, self._qp_tail.get(key, 0.0))
+        occupancy = max(cost.xfer_us(nbytes), cost.qp_msg_us * n_verbs)
+        engine_done = start + occupancy
+        link_done = self.link_xfer(start, server, nbytes)
+        self._qp_tail[key] = engine_done
+        done = max(engine_done, link_done) + cost.one_sided_base_us
+        done = max(done, self._qp_done.get(key, 0.0))        # CQ in order
+        self._qp_done[key] = done
+        return done
+
+    def wire_done(self, start_us: float, server: int, nbytes: int) -> float:
+        """Wire completion for a synchronous transfer starting at
+        ``start_us``: the shared-link congestion model under ``ooo=True``,
+        plain bandwidth otherwise — one dispatch point so the legacy and
+        congested models cannot drift apart per call site."""
+        if self.ooo:
+            return self.link_xfer(start_us, server, nbytes)
+        return start_us + self.cost.xfer_us(nbytes)
+
+    def link_xfer(self, start_us: float, server: int, nbytes: int) -> float:
+        """Charge an ``nbytes`` transfer to ``server``'s shared link: the
+        transfer itself runs at link bandwidth from ``start_us`` (returned
+        completion time), and the occupancy accumulates in
+        ``ServerStats.link_busy_us`` — a saturated link is a *makespan*
+        floor, exactly like a saturated CPU.  (A busy-until scalar would
+        time-warp here: threads execute in program order with unsynchronized
+        virtual clocks, so a thread ahead in time would spuriously delay a
+        thread still in the link's idle past.)  Only the ``ooo=True``
+        congestion model calls this; the caller guards."""
+        us = self.cost.link_xfer_us(nbytes)
+        self.servers[server].link_busy_us += us
+        return start_us + us
+
+    def _forget_tid(self, tid: int) -> None:
+        self._qp_rr.pop(tid, None)
+        for qp in range(self.qps):
+            self._qp_tail.pop((tid, qp), None)
+            self._qp_done.pop((tid, qp), None)
+
+    def _clear_qp_state(self) -> None:
+        self._qp_rr.clear()
+        self._qp_tail.clear()
+        self._qp_done.clear()
 
     # ---- thread-charged primitives -------------------------------------
     def compute(self, th, cycles: float) -> None:
@@ -264,8 +548,9 @@ class Sim:
 
     def rdma_read(self, th, src_server: int, nbytes: int) -> None:
         """One-sided READ: no CPU on the remote side."""
-        us = self.cost.one_sided_base_us + self.cost.xfer_us(nbytes)
-        th.t_us += us
+        self.next_cid()
+        th.t_us = (self.wire_done(th.t_us, src_server, nbytes)
+                   + self.cost.one_sided_base_us)
         self.net.one_sided_reads += 1
         self.net.bytes_moved += nbytes
         self.net.round_trips += 1
@@ -273,8 +558,9 @@ class Sim:
         self.servers[th.server].bytes_in += nbytes
 
     def rdma_write(self, th, dst_server: int, nbytes: int) -> None:
-        us = self.cost.one_sided_base_us + self.cost.xfer_us(nbytes)
-        th.t_us += us
+        self.next_cid()
+        th.t_us = (self.wire_done(th.t_us, dst_server, nbytes)
+                   + self.cost.one_sided_base_us)
         self.net.one_sided_writes += 1
         self.net.bytes_moved += nbytes
         self.net.round_trips += 1
@@ -282,6 +568,7 @@ class Sim:
         self.servers[th.server].bytes_out += nbytes
 
     def rdma_atomic(self, th, dst_server: int) -> None:
+        self.next_cid()
         th.t_us += self.cost.atomic_verb_us
         self.net.atomics += 1
         self.net.round_trips += 1
@@ -316,11 +603,26 @@ class Sim:
         span = self.wb.pending_completion_us
         for s in range(self.n):
             cpu = self.servers[s].cpu_busy_us / self.cores
-            span = max(span, per_server_thread[s], cpu)
+            span = max(span, per_server_thread[s], cpu,
+                       self.servers[s].link_busy_us)
         return span
 
     def snapshot(self) -> dict:
-        return {
+        """Stats snapshot; also ends the observation epoch — per-thread
+        completion-plane state (write-back tails, QP rings) is cleared so a
+        later epoch reusing thread ids (elastic rescale) starts clean.
+        Compute ``makespan_us`` *before* snapshotting."""
+        out = {
             "net": dataclasses.asdict(self.net),
             "servers": [dataclasses.asdict(s) for s in self.servers],
         }
+        self.wb.end_epoch()
+        return out
+
+    def reset(self) -> None:
+        """Zero every stat and clear the completion plane (fresh trace on
+        the same cluster)."""
+        self.net = NetStats()
+        self.servers = [ServerStats() for _ in range(self.n)]
+        self.wb.end_epoch()
+        self.wb.posted = 0

@@ -74,7 +74,7 @@ class DBox:
     """Owner pointer (DRust's ``DBox<T>``, re-implemented ``Box``)."""
 
     __slots__ = ("g", "l", "u", "home", "rt", "live_refs", "live_mut",
-                 "dropped", "tied")
+                 "dropped", "tied", "wb_cids")
 
     def __init__(self, rt: "DrustRuntime", g: int, home: int, tied: bool = False):
         self.rt = rt
@@ -86,6 +86,7 @@ class DBox:
         self.live_mut = False
         self.dropped = False
         self.tied = tied    # this owner is a TBox (affinity-tied to a parent)
+        self.wb_cids: list[int] = []   # in-flight write-back completion ids
 
     def __repr__(self):
         return (f"DBox(g={A.clear_color(self.g):#x}c{A.get_color(self.g)}, "
@@ -215,17 +216,19 @@ class MutRef:
         """DropMutRef: WRITE the colored address back into the owner slot.
 
         The 8-byte pointer write-back is posted on the async write-back
-        queue: the dropping thread pays only the issue cost; completion is
-        tracked and fenced at synchronization points (ownership transfer,
-        makespan) — the next owner access goes through the new address
-        regardless, so coherence (Appendix C) is unaffected."""
+        queue: the dropping thread pays only the issue cost; the verb's
+        completion id is recorded on the owner so synchronization points
+        (ownership transfer, drop-time dealloc, makespan) fence exactly the
+        ids they depend on — the next owner access goes through the new
+        address regardless, so coherence (Appendix C) is unaffected."""
         if self.dropped:
             return
         self.dropped = True
         rt, owner = self.rt, self.owner
         if owner.home != th.server:
             if rt.batch_io:
-                rt.sim.wb.post(th, owner.home, 8)            # pipelined WRITE
+                owner.wb_cids.append(
+                    rt.sim.wb.post(th, owner.home, 8))       # pipelined WRITE
             else:
                 rt.sim.rdma_write(th, owner.home, 8)         # sync WRITE
         else:
@@ -266,7 +269,9 @@ class StackRef:
         rt = self.rt
         if th.server != self.src_server:
             if rt.batch_io:
-                rt.sim.wb.post(th, self.src_server, self.size)  # pipelined
+                cid = rt.sim.wb.post(th, self.src_server, self.size)
+                if self.parent is not None:   # transfer of the parent fences it
+                    self.parent.wb_cids.append(cid)
             else:
                 rt.sim.rdma_write(th, self.src_server, self.size)
         else:
@@ -431,6 +436,7 @@ class DrustRuntime:
         if box.live_mut or box.live_refs:
             raise BorrowError("drop while borrows alive")
         stack, group = [box], []
+        wb_upto = 0
         while stack:
             b = stack.pop()
             if b.dropped:
@@ -439,6 +445,9 @@ class DrustRuntime:
                 raise BorrowError("drop while borrows alive")
             b._release_pin()
             b.dropped = True
+            if b.wb_cids:
+                wb_upto = max(wb_upto, max(b.wb_cids))
+                b.wb_cids.clear()
             raw = A.clear_color(b.g)
             if not self.heap.contains(raw):
                 continue
@@ -447,6 +456,11 @@ class DrustRuntime:
                 child_box = self.owner_of.get(child)
                 if child_box is not None and not child_box.dropped:
                     stack.append(child_box)
+        if wb_upto:
+            # B.4 dealloc: in-flight owner-slot write-backs into the dropped
+            # closure must complete before the slots are freed (the NIC may
+            # not WRITE into recycled memory) — fence only those ids.
+            self.sim.wb.fence(th, wb_upto)
         if not group:
             return
         remote: dict[int, int] = {}              # server -> freed addr count
@@ -484,15 +498,35 @@ class DrustRuntime:
                 if part.contains(box.l):
                     part.free(box.l)
             box.l = A.NULL
-        # §4.2.3: ownership transfer is the visibility point — fence the
-        # async write-back pipeline before the pointer ships.
-        self.sim.wb.drain(th_src)
+        # §4.2.3: ownership transfer is the visibility point — fence exactly
+        # the write-back completion ids this pointer depends on (the box's
+        # own and its tied children's); later verbs stay in flight.
+        upto = self._take_wb_deps(box)
+        if upto:
+            self.sim.wb.fence(th_src, upto)
         self.sim.rpc(th_src, dst_server, req_bytes=16)   # ship the pointer
         box.home = dst_server
         # ... and flush batched write-backs to the backup partition now.
         self.on_transfer(A.clear_color(box.g))
 
     # ---- internals ---------------------------------------------------------
+    def _take_wb_deps(self, box: DBox) -> int:
+        """Collect (and clear) the in-flight write-back completion ids a
+        synchronization point on ``box`` depends on: the box's own pending
+        owner-slot write-backs plus its TBox closure's (a group move ships
+        the whole closure).  Returns the highest dependent cid (0 = none) —
+        the ``upto_id`` for a completion-id fence."""
+        upto = max(box.wb_cids, default=0)
+        box.wb_cids.clear()
+        raw = A.clear_color(box.g)
+        if self.heap.contains(raw):
+            for a in self._group(raw):
+                child = self.owner_of.get(a)
+                if child is not None and child is not box and child.wb_cids:
+                    upto = max(upto, max(child.wb_cids))
+                    child.wb_cids.clear()
+        return upto
+
     def _group(self, raw: int) -> list[int]:
         return self.heap.tie_closure(raw)
 

@@ -98,6 +98,15 @@ class Scheduler:
             waiter.t_us = max(waiter.t_us, th.t_us)
         return th.result
 
+    def retire(self, th: Thread) -> None:
+        """Thread leaves the pool (elastic rescale / worker shutdown): mark
+        done and clear the completion plane's per-thread state so a future
+        thread reusing the id cannot inherit stale write-back tails or QP
+        rings.  The retiree's in-flight write-backs stay in the makespan."""
+        th.done = True
+        self.cluster.sim.wb.forget(th.tid)
+        self.cluster.controller.thread_table.pop(th.tid, None)
+
     def migrate(self, th: Thread, dst: int) -> float:
         """Ship fn pointer + registers + stack; stack address is preserved
         because stack ranges are globally aligned (Fig. 3).  Returns the
@@ -233,8 +242,10 @@ class Cluster:
     def __init__(self, n_servers: int, backend: str = "drust",
                  cores_per_server: int = 16, cost: CostModel | None = None,
                  partition_bytes: int | None = None, replicate: bool = False,
-                 batch_io: bool = True):
-        self.sim = Sim(n_servers, cores_per_server, cost)
+                 batch_io: bool = True, qps_per_thread: int = 1,
+                 ooo: bool = False):
+        self.sim = Sim(n_servers, cores_per_server, cost,
+                       qps_per_thread=qps_per_thread, ooo=ooo)
         self.heap = GlobalHeap(n_servers, partition_bytes)
         self.backend_name = backend
         self.backend_drust = backend == "drust"

@@ -10,14 +10,27 @@ When hypothesis is installed these are the real objects; when it is absent,
 ``given`` decorates the test with ``pytest.mark.skip`` and ``st`` is an
 inert strategy stand-in (strategy expressions are built at module import
 time, so they must not raise).
+
+CI determinism: a ``ci`` settings profile is registered with a pinned seed
+(``derandomize=True`` derives examples from the test body, so every run
+generates the same schedules) and no deadline (shared runners are noisy).
+The workflow selects it via ``HYPOTHESIS_PROFILE=ci``.
 """
 
 from __future__ import annotations
+
+import os
 
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
     HAVE_HYPOTHESIS = True
+
+    settings.register_profile("ci", derandomize=True, deadline=None)
+    # Only honor the profile we registered — a foreign HYPOTHESIS_PROFILE
+    # value (exported for some other project) must not break collection.
+    if os.environ.get("HYPOTHESIS_PROFILE") == "ci":
+        settings.load_profile("ci")
 except ImportError:                                    # pragma: no cover
     import pytest
 

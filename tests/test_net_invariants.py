@@ -1,0 +1,300 @@
+"""Property-based fence-correctness suite for the multi-QP completion plane.
+
+Random schedules of post/fence/drain across threads and QPs drive the
+``WritebackQueue`` completion-id machinery; after every operation the
+invariants below must hold:
+
+  * Fence-Correctness: ``fence(th, upto)`` retires *exactly* the pending
+    verbs with ``cid <= upto`` and blocks ``th`` until the latest of their
+    completion times; verbs posted later stay in flight.
+  * Transfer-Dependency: an ownership transfer never observes a write-back
+    whose completion id it depends on as incomplete (the box's recorded
+    cids are retired and the fencing thread's clock covers them).
+  * Makespan-Monotonicity: ``makespan_us`` is monotone in write-back depth
+    — posting more verbs can only extend the completion floor.
+  * In-Order-CQ: with ``qps_per_thread=1`` completions are strictly ordered
+    (``ooo_completions == 0``); inversions require sibling QPs.
+
+Each property runs twice: hypothesis-generated (200 schedules for the
+fence suite, derandomized under the CI profile — see ``_hypcompat``) and a
+seeded deterministic sweep that executes on machines without hypothesis.
+
+The suite also pins the *degenerate-config equivalence*: with
+``qps_per_thread=1`` and reordering disabled the new completion plane must
+reproduce PR-1's round-trip/makespan numbers exactly on the socialnet and
+dataframe traces (all three backends, both I/O planes) — golden values in
+``tests/data/net_golden_pr1.json`` were captured from the PR-1 plane.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+
+import pytest
+
+from _hypcompat import given, settings, st
+
+from repro.core import Cluster
+
+N_SERVERS = 4
+N_THREADS = 4
+NEW_COUNTERS = ("fences", "fenced_verbs", "ooo_completions", "qp_switches")
+
+
+def make(qps: int, ooo: bool = True, n_servers: int = N_SERVERS):
+    cl = Cluster(n_servers, backend="drust", qps_per_thread=qps, ooo=ooo)
+    ths = []
+    for i in range(N_THREADS):
+        th = cl.main_thread(0)
+        th.server = i % n_servers
+        ths.append(th)
+    return cl, ths
+
+
+# --------------------------------------------------------------------------
+#  Fence correctness over raw post/fence/drain schedules
+# --------------------------------------------------------------------------
+def run_fence_schedule(ops, qps: int, ooo: bool = True) -> None:
+    """Execute a schedule and check the fence invariants after every op.
+
+    ``ops`` is a list of (kind, thread_idx, param): posts pick a destination
+    from ``param``; fences pick which pending cid to fence up to."""
+    cl, ths = make(qps, ooo)
+    wb = cl.sim.wb
+    live: dict[int, float] = {}          # shadow: pending cid -> done_us
+    for kind, t, p in ops:
+        th = ths[t % N_THREADS]
+        if kind in ("post", "post_big"):
+            nbytes = 8 if kind == "post" else 16384
+            cid = wb.post(th, 1 + p % (N_SERVERS - 1), nbytes)
+            live[cid] = wb._pending[cid].done_us
+        elif kind == "fence":
+            cids = sorted(wb._pending)
+            upto = cids[p % len(cids)] if cids else 0
+            expected = [c for c in cids if c <= upto]
+            exp_t = max((live[c] for c in expected), default=0.0)
+            t_before = th.t_us
+            wb.fence(th, upto)
+            for c in expected:           # retired: exactly the <= upto set
+                assert c not in wb._pending
+                live.pop(c, None)
+            assert set(wb._pending) == set(live), "fence retired a later cid"
+            assert th.t_us >= max(t_before, exp_t) - 1e-9
+        elif kind == "fence_all":
+            exp_t = max(live.values(), default=0.0)
+            t_before = th.t_us
+            wb.fence_all(th)
+            assert not wb._pending
+            assert th.t_us >= max(t_before, exp_t) - 1e-9
+            live.clear()
+        assert wb.pending_completion_us == max(live.values(), default=0.0)
+        assert cl.makespan_us() >= wb.pending_completion_us - 1e-9
+    if qps == 1:
+        assert cl.sim.net.ooo_completions == 0, "single QP completes in order"
+    wb.fence_all(ths[0])                 # every verb is eventually retired
+    assert not wb._pending
+
+
+FENCE_KINDS = ["post", "post", "post_big", "fence", "fence", "fence_all"]
+
+fence_ops = st.lists(
+    st.tuples(st.sampled_from(FENCE_KINDS),
+              st.integers(0, N_THREADS - 1),
+              st.integers(0, 7)),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=200, deadline=None)
+@given(fence_ops, st.sampled_from([1, 2, 4]))
+def test_fence_correctness_property(ops, qps):
+    run_fence_schedule(ops, qps)
+
+
+def test_fence_correctness_200_seeded_schedules():
+    """Deterministic twin of the hypothesis suite: 200 seeded random
+    schedules, so the property is exercised even without hypothesis."""
+    rng = random.Random(0)
+    for _ in range(200):
+        qps = rng.choice([1, 2, 4])
+        ooo = rng.random() < 0.8
+        ops = [(rng.choice(FENCE_KINDS), rng.randrange(N_THREADS),
+                rng.randrange(8))
+               for _ in range(rng.randint(1, 40))]
+        run_fence_schedule(ops, qps, ooo)
+
+
+# --------------------------------------------------------------------------
+#  Transfer-dependency: ownership transfers fence their own cids
+# --------------------------------------------------------------------------
+def run_ownership_schedule(ops, qps: int, ooo: bool) -> None:
+    cl, ths = make(qps, ooo)
+    wb = cl.sim.wb
+    boxes = [cl.backend.alloc(ths[i % N_THREADS], 64, ("init", i))
+             for i in range(3)]
+    dep_cids: dict[int, list[tuple[int, float]]] = {0: [], 1: [], 2: []}
+    for kind, s, o in ops:
+        th, box = ths[s % N_THREADS], boxes[o % 3]
+        if kind == "write":
+            before = set(wb._pending)
+            cl.backend.write(th, box, (s, o))
+            for c in set(wb._pending) - before:
+                dep_cids[o % 3].append((c, wb._pending[c].done_us))
+        elif kind == "read":
+            cl.backend.read(th, box)
+        elif kind == "transfer":
+            # every dep cid ever attached to the box must be covered — also
+            # the ones another thread's fence already swept (their retired
+            # completion times still gate this transfer)
+            deps = list(dep_cids[o % 3])
+            cl.drust.transfer(th, box, (s + 1) % N_SERVERS)
+            for c, d in deps:
+                assert c not in wb._pending, \
+                    "transfer observed a dependent write-back as incomplete"
+                assert th.t_us >= d - 1e-9, \
+                    "transfer did not wait for a dependent completion"
+            assert box.wb_cids == []
+            dep_cids[o % 3] = []
+    wb.fence_all(ths[0])
+    assert not wb._pending
+
+
+ownership_ops = st.lists(
+    st.tuples(st.sampled_from(["write", "write", "read", "transfer"]),
+              st.integers(0, N_THREADS - 1),
+              st.integers(0, 2)),
+    min_size=1, max_size=50)
+
+
+@settings(max_examples=100, deadline=None)
+@given(ownership_ops, st.sampled_from([1, 2, 4]), st.booleans())
+def test_transfer_dependency_property(ops, qps, ooo):
+    run_ownership_schedule(ops, qps, ooo)
+
+
+def test_transfer_dependency_seeded_schedules():
+    rng = random.Random(1)
+    kinds = ["write", "write", "read", "transfer"]
+    for _ in range(100):
+        qps = rng.choice([1, 2, 4])
+        ooo = rng.random() < 0.5
+        ops = [(rng.choice(kinds), rng.randrange(N_THREADS), rng.randrange(3))
+               for _ in range(rng.randint(1, 50))]
+        run_ownership_schedule(ops, qps, ooo)
+
+
+def test_transfer_leaves_unrelated_later_verbs_in_flight():
+    """The fence is scoped: verbs posted after the transferred box's last
+    dependent cid survive the transfer."""
+    cl, ths = make(qps=2)
+    t0 = ths[0]
+    box = cl.backend.alloc(ths[1], 64, 0)        # home: server 1
+    cl.backend.write(t0, box, 1)                 # dep cid on box
+    unrelated = cl.sim.wb.post(t0, 2, 4096)      # posted later, no dep
+    cl.drust.transfer(t0, box, 1)
+    assert unrelated in cl.sim.wb._pending       # still in flight
+    assert box.wb_cids == []
+    cl.sim.wb.fence_all(t0)
+
+
+# --------------------------------------------------------------------------
+#  Makespan monotone in write-back depth
+# --------------------------------------------------------------------------
+def check_makespan_monotone(posts, qps: int, ooo: bool) -> None:
+    cl = Cluster(N_SERVERS, backend="drust", qps_per_thread=qps, ooo=ooo)
+    th = cl.main_thread(0)
+    prev = cl.makespan_us()
+    for dst, nbytes in posts:
+        cl.sim.wb.post(th, 1 + dst % (N_SERVERS - 1), nbytes)
+        span = cl.makespan_us()
+        assert span >= prev - 1e-9, "makespan shrank with write-back depth"
+        prev = span
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, N_SERVERS - 2),
+                          st.sampled_from([8, 512, 16384])),
+                min_size=1, max_size=40),
+       st.sampled_from([1, 2, 4]), st.booleans())
+def test_makespan_monotone_property(posts, qps, ooo):
+    check_makespan_monotone(posts, qps, ooo)
+
+
+def test_makespan_monotone_seeded():
+    rng = random.Random(2)
+    for _ in range(100):
+        posts = [(rng.randrange(N_SERVERS - 1),
+                  rng.choice([8, 512, 16384]))
+                 for _ in range(rng.randint(1, 40))]
+        check_makespan_monotone(posts, rng.choice([1, 2, 4]),
+                                rng.random() < 0.5)
+
+
+# --------------------------------------------------------------------------
+#  QP-sweep acceptance at 8 servers
+# --------------------------------------------------------------------------
+def test_multiqp_improves_makespan_at_8_servers():
+    """Acceptance: at 8 servers with ``qps_per_thread=4`` and out-of-order
+    completions enabled, makespan improves over the single-QP plane while
+    round-trip counts are unchanged.  Uses the exact trace the benchmark
+    sweep measures (``protocol_micro._qp_wb_run``) so the acceptance test
+    can never desynchronize from the benchmarked workload."""
+    from benchmarks.protocol_micro import _qp_wb_run
+    single, _ = _qp_wb_run(qps=1, depth=56)
+    multi, _ = _qp_wb_run(qps=4, depth=56)
+    assert multi.makespan_us() < single.makespan_us()
+    assert (multi.sim.net.round_trips == single.sim.net.round_trips)
+    assert (multi.sim.net.async_writebacks
+            == single.sim.net.async_writebacks == 56)
+
+
+def test_single_qp_completions_in_order_even_with_mixed_sizes():
+    cl = Cluster(4, backend="drust", ooo=True, qps_per_thread=1)
+    t0 = cl.main_thread(0)
+    for i in range(20):
+        cl.sim.wb.post(t0, 1 + i % 3, 16384 if i % 3 == 0 else 8)
+    assert cl.sim.net.ooo_completions == 0
+    dones = [v.done_us for v in cl.sim.wb._pending.values()]
+    assert dones == sorted(dones)        # strictly CQ-ordered
+
+
+def test_mixed_sizes_reorder_across_sibling_qps():
+    cl = Cluster(4, backend="drust", ooo=True, qps_per_thread=2)
+    t0 = cl.main_thread(0)
+    for i in range(20):
+        cl.sim.wb.post(t0, 1 + i % 3, 16384 if i % 2 == 0 else 8)
+    assert cl.sim.net.ooo_completions > 0
+    assert cl.sim.net.qp_switches > 0
+
+
+# --------------------------------------------------------------------------
+#  Degenerate-config equivalence vs the PR-1 plane (golden fixture)
+# --------------------------------------------------------------------------
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "net_golden_pr1.json")
+with open(GOLDEN_PATH) as f:
+    GOLDEN = json.load(f)
+
+APP_KW = {
+    "socialnet": dict(n_requests=120),
+    "dataframe": dict(n_columns=4, chunks_per_column=8, n_ops=4,
+                      use_tbox=True),
+}
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN))
+def test_degenerate_plane_reproduces_pr1(key):
+    from repro.apps.dataframe import run_dataframe
+    from repro.apps.socialnet import run_socialnet
+    app, backend, mode = key.split("/")
+    fn = run_socialnet if app == "socialnet" else run_dataframe
+    r = fn(4, backend, batch_io=(mode == "batched"),
+           qps_per_thread=1, ooo=False, **APP_KW[app])
+    g = GOLDEN[key]
+    assert r.makespan_us == pytest.approx(g["makespan_us"], rel=1e-9), \
+        f"{key}: makespan drifted from the PR-1 plane"
+    for k, v in g["net"].items():        # byte-identical NetStats traffic
+        assert r.net[k] == v, f"{key}: NetStats[{k}] {r.net[k]} != {v}"
+    for k in NEW_COUNTERS:               # new machinery is inert when off
+        assert r.net[k] == 0, f"{key}: {k} nonzero in degenerate config"

@@ -118,6 +118,60 @@ def test_writeback_batched_until_transfer():
     assert cl.replicator.flushes == flushes0 + 1
 
 
+def test_writeback_state_cleared_on_retire_and_tid_reuse():
+    """Per-thread completion state is keyed by thread id; after an elastic
+    rescale the ids are reused, so a retiring thread must clear its state —
+    otherwise the next thread with the same id inherits stale completion
+    tails and gets charged for write-backs it never posted."""
+    cl = Cluster(2, backend="drust", ooo=True, qps_per_thread=2)
+    t0 = cl.main_thread(0)
+    cid = cl.sim.wb.post(t0, 1, 1 << 20)      # completes far in the future
+    late = cl.sim.wb.pending_completion_us
+    assert late > 100
+    cl.scheduler.retire(t0)
+    # the retiree's in-flight cost still bounds the makespan ...
+    assert cl.makespan_us() >= late
+    # ... its per-thread QP state is gone ...
+    assert (t0.tid, 0) not in cl.sim._qp_tail
+    assert (t0.tid, 0) not in cl.sim._qp_done
+    # ... and a live thread depending on the retiree's write-back still
+    # waits for it (cids are global; retirement does not lose dependencies)
+    waiter = cl.main_thread(0)
+    cl.sim.wb.fence(waiter, cid)
+    assert waiter.t_us >= late - 1e-9
+    # rescale boundary: snapshot ends the epoch, then a thread reusing the
+    # id starts with a clean slate
+    cl.sim.snapshot()
+    t1 = cl.main_thread(0)
+    t1.tid = t0.tid                           # elastic rescale reuses the id
+    cl.sim.wb.fence_all(t1)
+    assert t1.t_us == 0.0                     # no inherited completion tail
+
+
+def test_snapshot_ends_epoch_and_clears_writeback_tails():
+    """``Sim.snapshot()`` closes an observation epoch: pending per-thread
+    write-back state is cleared so reused thread ids in the next epoch
+    cannot observe it (makespan must be computed before snapshotting)."""
+    cl = Cluster(2, backend="drust")
+    t0 = cl.main_thread(0)
+    cl.sim.wb.post(t0, 1, 4096)
+    assert cl.sim.wb.pending_completion_us > 0
+    span = cl.makespan_us()
+    snap = cl.sim.snapshot()
+    assert snap["net"]["async_writebacks"] == 1
+    assert span >= 3.5                        # wb completion was in the span
+    assert cl.sim.wb.pending_completion_us == 0.0
+    t1 = cl.main_thread(0)
+    t1.tid = t0.tid
+    cl.sim.wb.fence_all(t1)
+    assert t1.t_us == 0.0
+    # Sim.reset() also clears the plane and zeroes the stats
+    cl.sim.wb.post(t1, 1, 4096)
+    cl.sim.reset()
+    assert cl.sim.wb.pending_completion_us == 0.0
+    assert cl.sim.net.async_writebacks == 0
+
+
 def test_mem_pressure_evicts_incrementally_to_watermark():
     """mem>90% policy reclaims only the excess above the high-water mark
     (CLOCK partial eviction), not every unpinned copy (the old full sweep)."""
