@@ -4,17 +4,25 @@
         [--baseline BENCH_protocol.json] [--tolerance 0.10] [--out current.json]
 
 Runs ``benchmarks/run.py --quick`` (protocol micro-benchmarks + the
-batched-I/O app sweep + the multi-QP sweep) and compares the
-*deterministic* metrics against the committed ``BENCH_protocol.json``:
+batched-I/O app sweep + the multi-QP sweep + the coalesce/prefetch
+sweeps) and compares the *deterministic* metrics against the committed
+``BENCH_protocol.json``:
 
-  * per-app round trips and virtual makespan (batched and unbatched
-    planes) — the paper's headline trajectory;
+  * per-app round trips and virtual makespan (manual batched/unbatched
+    planes AND the runtime coalescer's ``auto`` mode) — the paper's
+    headline trajectory;
   * protocol message counts (``proto_*_msgs`` derived values);
   * the multi-QP completion plane (``qp_sweep``): virtual makespan within
     tolerance, and the fence/ooo counters (``fences``, ``fenced_verbs``,
     ``ooo_completions``, ``qp_switches``, ``round_trips``) pinned
     *exactly* — they are fully deterministic, so any drift is a behavior
-    change that must be intentional (regenerate the baseline).
+    change that must be intentional (regenerate the baseline);
+  * the speculative-prefetch counters (``speculative_fetches``,
+    ``late_fences``, ``wasted_prefetches``) — pinned exactly everywhere
+    they appear (app modes and the ``prefetch`` section);
+  * the coalesce-budget sweep (``coalesce_sweep``): the adaptive policy's
+    makespan within tolerance of its committed value, and its
+    round-trip/flush counters exactly.
 
 Wall-clock microsecond columns are ignored — they are noise on shared CI
 runners; everything gated here comes from the deterministic simulator.
@@ -31,13 +39,18 @@ import json
 import sys
 
 APP_METRICS = ("round_trips", "makespan_us")
-APP_MODES = ("batched", "unbatched")
+APP_MODES = ("batched", "unbatched", "auto")
 # Deterministic completion-plane counters: pinned exactly, both directions.
 # (App round_trips stay on the 10%-tolerance path above; the qp_sweep adds
 # round_trips to the exact set because the sweep holds them constant by
 # construction.)
-APP_EXACT = ("fences", "fenced_verbs", "ooo_completions", "qp_switches")
-QP_EXACT = APP_EXACT + ("round_trips",)
+APP_EXACT = ("fences", "fenced_verbs", "ooo_completions", "qp_switches",
+             "speculative_fetches", "late_fences", "wasted_prefetches")
+QP_EXACT = ("fences", "fenced_verbs", "ooo_completions", "qp_switches",
+            "round_trips")
+COALESCE_EXACT = ("round_trips", "flushes", "coalesced_derefs")
+PREFETCH_EXACT = ("round_trips", "speculative_fetches", "late_fences",
+                  "wasted_prefetches")
 
 
 def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
@@ -49,8 +62,11 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
             failures.append(f"apps/{app}: missing from current run")
             continue
         for mode in APP_MODES:
+            base_mode = base_entry.get(mode)
+            if base_mode is None:
+                continue                   # pre-coalescer baseline
             for metric in APP_METRICS:
-                base = base_entry[mode][metric]
+                base = base_mode[metric]
                 cur = cur_entry.get(mode, {}).get(metric)
                 if cur is None:
                     failures.append(f"apps/{app}/{mode}/{metric}: missing")
@@ -60,7 +76,7 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
                         f"{base} (+{100 * (cur / base - 1):.1f}%, "
                         f"tol {100 * tolerance:.0f}%)")
             for metric in APP_EXACT:
-                base = base_entry[mode].get(metric)
+                base = base_mode.get(metric)
                 if base is None:
                     continue               # pre-multi-QP baseline
                 cur = cur_entry.get(mode, {}).get(metric)
@@ -87,6 +103,29 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
                 failures.append(
                     f"qp_sweep/{name}/{metric}: {cur} != baseline {base} "
                     f"(deterministic counter, pinned exactly)")
+    for section, exact in (("coalesce_sweep", COALESCE_EXACT),
+                           ("prefetch", PREFETCH_EXACT)):
+        for name, base_entry in sorted(baseline.get(section, {}).items()):
+            cur_entry = current.get(section, {}).get(name)
+            if cur_entry is None:
+                failures.append(f"{section}/{name}: missing from current run")
+                continue
+            base, cur = base_entry["makespan_us"], cur_entry.get("makespan_us")
+            if cur is None:
+                failures.append(f"{section}/{name}/makespan_us: missing")
+            elif cur > base * (1.0 + tolerance):
+                failures.append(
+                    f"{section}/{name}/makespan_us: {cur} vs baseline {base} "
+                    f"(+{100 * (cur / base - 1):.1f}%, "
+                    f"tol {100 * tolerance:.0f}%)")
+            for metric in exact:
+                if base_entry.get(metric) is None:
+                    continue
+                if cur_entry.get(metric) != base_entry[metric]:
+                    failures.append(
+                        f"{section}/{name}/{metric}: {cur_entry.get(metric)} "
+                        f"!= baseline {base_entry[metric]} (deterministic "
+                        f"counter, pinned exactly)")
     for name, meta in sorted(baseline.get("micro", {}).items()):
         if not name.endswith("_msgs"):
             continue                       # wall-clock rows: not gated
@@ -132,6 +171,9 @@ def main(argv=None) -> int:
     n_gated += len(baseline.get("apps", {})) * len(APP_MODES) * (
         len(APP_METRICS) + len(APP_EXACT))
     n_gated += len(baseline.get("qp_sweep", {})) * (1 + len(QP_EXACT))
+    n_gated += len(baseline.get("coalesce_sweep", {})) * (
+        1 + len(COALESCE_EXACT))
+    n_gated += len(baseline.get("prefetch", {})) * (1 + len(PREFETCH_EXACT))
     print(f"bench gate OK: {n_gated} metrics within "
           f"{100 * args.tolerance:.0f}% of {args.baseline}")
     return 0

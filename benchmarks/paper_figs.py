@@ -55,10 +55,14 @@ def fig5_scaling(nodes=NODES, backends=BACKENDS):
 
 
 def fig6_affinity():
-    """Fig. 6: TBox / spawn_to ablation on DataFrame, 8 nodes."""
-    base = run_dataframe(8, "drust").makespan_us
-    tb = run_dataframe(8, "drust", use_tbox=True).makespan_us
-    both = run_dataframe(8, "drust", use_tbox=True, use_spawn_to=True).makespan_us
+    """Fig. 6: TBox / spawn_to ablation on DataFrame, 8 nodes.  Pinned to
+    the manual plane so the figure isolates the affinity annotations (the
+    runtime coalescer has its own sweep)."""
+    base = run_dataframe(8, "drust", coalesce="manual").makespan_us
+    tb = run_dataframe(8, "drust", use_tbox=True,
+                       coalesce="manual").makespan_us
+    both = run_dataframe(8, "drust", use_tbox=True, use_spawn_to=True,
+                         coalesce="manual").makespan_us
     return [
         ("fig6_dataframe_base", base, 1.0),
         ("fig6_dataframe_tbox", tb, round(base / tb, 3)),
@@ -130,8 +134,10 @@ def batch_plane_sweep(n_servers: int = 8):
     rows = []
     for app, fn, kw in (("socialnet", run_socialnet, {}),
                         ("dataframe", run_dataframe, {"use_tbox": True})):
-        on = fn(n_servers, "drust", batch_io=True, **kw)
-        off = fn(n_servers, "drust", batch_io=False, **kw)
+        on = fn(n_servers, "drust", batch_io=True, coalesce="manual",
+                **kw)
+        off = fn(n_servers, "drust", batch_io=False, coalesce="manual",
+                 **kw)
         ratio = off.net["round_trips"] / max(1, on.net["round_trips"])
         rows.append((f"batchio_{app}_rtt_batched", on.makespan_us,
                      on.net["round_trips"]))

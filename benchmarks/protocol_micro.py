@@ -15,13 +15,20 @@ The multi-QP sweeps (``qp_writeback_sweep``/``qp_readmany_sweep``) measure
 the out-of-order completion plane: makespan vs QP count at 8 servers, with
 round trips held constant — the NIC's per-QP message rate is the serial
 bottleneck that striping doorbells across QPs removes.
+
+The coalesce-budget sweep (``coalesce_budget_sweep``) drives the runtime
+deref coalescer (``Cluster(coalesce="auto")``) across static quantum
+budgets and three request mixes (small / bulk / mixed object sizes) on the
+multi-QP plane, and pins that the *adaptive* policy tracks the best static
+batch size per mix — large quanta when the per-QP message rate dominates,
+knee-bounded quanta when bandwidth does.
 """
 
 from __future__ import annotations
 
 import time
 
-from repro.core import Cluster
+from repro.core import Cluster, CoalescePolicy
 
 
 def _fresh(backend: str):
@@ -222,6 +229,76 @@ def qp_sweep_summary(qp_counts=(1, 2, 4), depths=(8, 56)) -> dict:
     return out
 
 
+COALESCE_MIXES = ("small", "bulk", "mixed")
+COALESCE_BUDGETS = (1, 4, 16, 64)
+
+
+def _coalesce_run(mix: str, budget, n_objects: int = 96, n_servers: int = 8,
+                  qps: int = 4):
+    """One coalescer trace: a reader on the last server issues plain
+    per-object derefs of ``n_objects`` spread over the other servers; the
+    runtime registers and flushes them under the given quantum budget
+    (``"auto"`` = the adaptive policy).  Returns (cluster, reader)."""
+    policy = (CoalescePolicy() if budget == "auto"
+              else CoalescePolicy(max_pending=budget))
+    cl = Cluster(n_servers, backend="drust", ooo=True, qps_per_thread=qps,
+                 coalesce="auto", coalesce_policy=policy)
+    t0 = cl.main_thread(n_servers - 1)
+    sizes = {
+        "small": [256] * n_objects,
+        "bulk": [16384] * n_objects,
+        "mixed": [256 if i % 2 else 16384 for i in range(n_objects)],
+    }[mix]
+    boxes = [cl.backend.alloc(t0, sz, bytes(min(sz, 64)),
+                              server=i % (n_servers - 1))
+             for i, sz in enumerate(sizes)]
+    cl.sim.reset()                               # measure only the deref phase
+    t0.t_us = 0.0
+    for b in boxes:
+        cl.backend.read(t0, b)
+    return cl, t0
+
+
+def coalesce_budget_sweep():
+    """Makespan vs static quantum budget per request mix, plus the adaptive
+    policy: the ``derived`` column is the round-trip count (doorbells), the
+    headline is that ``auto`` lands at the best static budget's makespan on
+    every mix — big quanta for small objects, knee-bounded for bulk."""
+    rows = []
+    for mix in COALESCE_MIXES:
+        for budget in COALESCE_BUDGETS + ("auto",):
+            cl, _ = _coalesce_run(mix, budget)
+            rows.append((f"coalesce_{mix}_budget{budget}",
+                         cl.makespan_us(), cl.sim.net.round_trips))
+    return rows
+
+
+def coalesce_summary() -> dict:
+    """Deterministic coalesce-sweep trajectory for ``BENCH_protocol.json``:
+    per mix, the adaptive policy's makespan/round-trips/flushes and its
+    ratio to the best static budget — the regression gate holds the ratio's
+    makespan within tolerance and pins the counters exactly."""
+    out = {}
+    for mix in COALESCE_MIXES:
+        best = None
+        for budget in COALESCE_BUDGETS:
+            cl, _ = _coalesce_run(mix, budget)
+            span = cl.makespan_us()
+            best = span if best is None else min(best, span)
+        cl, _ = _coalesce_run(mix, "auto")
+        span = cl.makespan_us()
+        co = cl.drust.coalescer
+        out[mix] = {
+            "makespan_us": round(span, 3),
+            "best_static_us": round(best, 3),
+            "auto_over_best": round(span / best, 4),
+            "round_trips": cl.sim.net.round_trips,
+            "flushes": co.flushes,
+            "coalesced_derefs": co.flushed_derefs,
+        }
+    return out
+
+
 def clone_fastpath_guard(n_elems: int = 4096, reps: int = 30):
     """Microbenchmark guard for ``ownership._clone``: flat scalar containers
     must take the shallow fast path, not ``deepcopy``.  ``derived`` is the
@@ -258,6 +335,7 @@ def all_rows():
     rows += writeback_depth_sweep()
     rows += qp_writeback_sweep()
     rows += qp_readmany_sweep()
+    rows += coalesce_budget_sweep()
     rows += clone_fastpath_guard()
     return rows
 

@@ -15,9 +15,29 @@ import json
 import sys
 
 
+def _app_stats(r) -> dict:
+    return {
+        "makespan_us": round(r.makespan_us, 2),
+        "round_trips": r.net["round_trips"],
+        "bytes_moved": r.net["bytes_moved"],
+        "doorbell_batches": r.net["doorbell_batches"],
+        "batched_verbs": r.net["batched_verbs"],
+        "async_writebacks": r.net["async_writebacks"],
+        "fences": r.net["fences"],
+        "fenced_verbs": r.net["fenced_verbs"],
+        "ooo_completions": r.net["ooo_completions"],
+        "qp_switches": r.net["qp_switches"],
+        "speculative_fetches": r.net["speculative_fetches"],
+        "late_fences": r.net["late_fences"],
+        "wasted_prefetches": r.net["wasted_prefetches"],
+    }
+
+
 def quick(out_path: str = "BENCH_protocol.json") -> dict:
     from benchmarks import protocol_micro
     from repro.apps.dataframe import run_dataframe
+    from repro.apps.gemm import run_gemm
+    from repro.apps.kvstore import run_kvstore
     from repro.apps.socialnet import run_socialnet
 
     rows = protocol_micro.all_rows()
@@ -28,6 +48,10 @@ def quick(out_path: str = "BENCH_protocol.json") -> dict:
         # Multi-QP / out-of-order completion plane trajectory: makespan plus
         # the deterministic fence/ooo counters, pinned by the gate.
         "qp_sweep": protocol_micro.qp_sweep_summary(),
+        # Adaptive deref coalescer vs the best static quantum budget, per
+        # request mix (makespan gated within tolerance, counters exactly).
+        "coalesce_sweep": protocol_micro.coalesce_summary(),
+        "prefetch": {},
     }
     for app, fn, kw in (
         ("socialnet", run_socialnet, dict(n_requests=120)),
@@ -35,24 +59,32 @@ def quick(out_path: str = "BENCH_protocol.json") -> dict:
                                           n_ops=4, use_tbox=True)),
     ):
         entry = {}
-        for mode in (True, False):
-            r = fn(4, "drust", batch_io=mode, **kw)
-            entry["batched" if mode else "unbatched"] = {
-                "makespan_us": round(r.makespan_us, 2),
-                "round_trips": r.net["round_trips"],
-                "bytes_moved": r.net["bytes_moved"],
-                "doorbell_batches": r.net["doorbell_batches"],
-                "batched_verbs": r.net["batched_verbs"],
-                "async_writebacks": r.net["async_writebacks"],
-                "fences": r.net["fences"],
-                "fenced_verbs": r.net["fenced_verbs"],
-                "ooo_completions": r.net["ooo_completions"],
-                "qp_switches": r.net["qp_switches"],
-            }
+        # "batched"/"unbatched" keep the PR-1 manual choreography planes;
+        # "auto" is the runtime coalescer with zero app choreography.
+        for mode, mkw in (("batched", dict(batch_io=True, coalesce="manual")),
+                          ("unbatched", dict(batch_io=False,
+                                             coalesce="manual")),
+                          ("auto", dict(batch_io=True, coalesce="auto"))):
+            entry[mode] = _app_stats(fn(4, "drust", **mkw, **kw))
         entry["rtt_ratio"] = round(
             entry["unbatched"]["round_trips"]
             / max(1, entry["batched"]["round_trips"]), 2)
         summary["apps"][app] = entry
+    # Speculative-prefetch trajectory: the deferred-fence/wasted counters
+    # are fully deterministic — the gate pins them exactly.
+    for name, r in (
+        ("gemm_prefetch", run_gemm(4, "drust", n=256, tile=64,
+                                   prefetch=True)),
+        ("kvstore_window8", run_kvstore(4, "drust", n_keys=256, n_ops=600,
+                                        prefetch_window=8)),
+    ):
+        summary["prefetch"][name] = {
+            "makespan_us": round(r.makespan_us, 2),
+            "round_trips": r.net["round_trips"],
+            "speculative_fetches": r.net["speculative_fetches"],
+            "late_fences": r.net["late_fences"],
+            "wasted_prefetches": r.net["wasted_prefetches"],
+        }
     with open(out_path, "w") as f:
         json.dump(summary, f, indent=2, sort_keys=True)
     return summary
@@ -69,6 +101,12 @@ def main() -> None:
         for name, meta in summary["qp_sweep"].items():
             print(f"quick_qp_{name},{meta['makespan_us']:.2f},"
                   f"{meta['ooo_completions']}")
+        for name, meta in summary["coalesce_sweep"].items():
+            print(f"quick_coalesce_{name},{meta['makespan_us']:.2f},"
+                  f"{meta['auto_over_best']}")
+        for name, meta in summary["prefetch"].items():
+            print(f"quick_prefetch_{name},{meta['makespan_us']:.2f},"
+                  f"{meta['speculative_fetches']}")
         print("wrote BENCH_protocol.json", file=sys.stderr)
         return
 

@@ -14,10 +14,18 @@ Affinity annotations (§4.1.3, Fig. 6):
   * ``use_spawn_to`` — columnar operators run on the server hosting their
                        input column instead of round-robin placement.
 
-``batch_io=True`` (default) issues the hash-table probe reads and the
-per-operation chunk scans through the doorbell-coalesced I/O plane (one
-fetch round per source server instead of one verb per entry/chunk);
-``batch_io=False`` keeps the legacy per-object path with identical final
+``coalesce`` selects who batches the I/O:
+
+* ``"auto"`` (default, drust + batched plane only) — probes and chunk
+  scans are *plain per-object derefs*; the runtime registers them and
+  coalesces the fetches at quantum close — here mostly at the borrow
+  conflict when the next index-entry WRITE lands on a probed entry (the
+  write/read ping-pong closes the quantum), so the app carries zero
+  drain/fetch choreography.
+* ``"manual"`` — the PR-1 choreography: explicit ``read_many`` batches
+  for the probe set and both chunk passes (kept for A/B golden pins).
+
+``batch_io=False`` keeps the legacy per-object plane with identical final
 heap/cache state.  ``qps_per_thread``/``ooo``/``cost`` select the
 completion model (multi-QP out-of-order plane vs the legacy in-order
 plane; see ``core/net.py``).
@@ -40,12 +48,14 @@ def run_dataframe(n_servers: int, backend: str = "drust",
                   probes: int = 4, workers_per_server: int = 4,
                   cores: int = 16, use_tbox: bool = False,
                   use_spawn_to: bool = False, batch_io: bool = True,
-                  qps_per_thread: int = 1, ooo: bool = False,
-                  cost=None, seed: int = 0) -> AppResult:
+                  coalesce: str = "auto", qps_per_thread: int = 1,
+                  ooo: bool = False, cost=None, seed: int = 0) -> AppResult:
     use_tbox = use_tbox and backend == "drust"
     use_spawn_to = use_spawn_to and backend == "drust"
+    auto = coalesce == "auto" and backend == "drust" and batch_io
     cl = make_cluster(n_servers, backend, cores, batch_io=batch_io,
-                      qps_per_thread=qps_per_thread, ooo=ooo, cost=cost)
+                      qps_per_thread=qps_per_thread, ooo=ooo, cost=cost,
+                      coalesce="auto" if auto else "manual")
     rng = np.random.default_rng(seed)
     chunk_bytes = chunk_rows * 8
     chunk_cycles = CYCLES_PER_BYTE * chunk_bytes / SIMD_LANES
@@ -76,6 +86,8 @@ def run_dataframe(n_servers: int, backend: str = "drust",
         s.cpu_busy_us = 0.0
 
     ths = spread_threads(cl, workers_per_server)
+    choreograph = batch_io and not auto            # manual read_many batches
+    digest = 0.0                                   # result bytes (A/B pin)
     ops = 0
     w = 0
     # n_ops independent single-column queries run concurrently (h2oai-style);
@@ -102,10 +114,12 @@ def run_dataframe(n_servers: int, backend: str = "drust",
             w += 1
             probe_handles = [index[(k - p) % len(index)]
                              for p in range(1, probes)] + [index[k]]
-            if batch_io:                                  # batched probing
+            if choreograph:                               # batched probing
                 srcs = cl.backend.read_many(th, probe_handles)[-1]
             else:
-                for h in probe_handles[:-1]:              # hash-table probing
+                # plain hash-table probing: per-entry derefs (registered
+                # and coalesced by the runtime under coalesce="auto")
+                for h in probe_handles[:-1]:
                     cl.backend.read(th, h)
                 srcs = cl.backend.read(th, index[k])
             if use_tbox:
@@ -113,7 +127,7 @@ def run_dataframe(n_servers: int, backend: str = "drust",
                 # the whole group lands in the local cache in one READ
                 cl.backend.read(th, col[0])
             acc = 0.0
-            if batch_io:
+            if choreograph:
                 scan = cl.backend.read_many(th, [col[s] for s in srcs])
                 for chunk in scan:                        # scan pass
                     acc += float(np.sum(chunk))
@@ -128,14 +142,18 @@ def run_dataframe(n_servers: int, backend: str = "drust",
                     cl.sim.compute(th, chunk_cycles)
                     chunk = cl.backend.read(th, col[s_idx])   # materialize
                     cl.sim.compute(th, chunk_cycles * 0.25)
+            digest += acc
             out = cl.backend.alloc(th, chunk_bytes, acc)
             cl.backend.write(th, out, acc)
             ops += 1
 
-    return AppResult("dataframe", backend, n_servers, ops, cl.makespan_us(),
+    span = cl.makespan_us()                        # settles pending quanta
+    return AppResult("dataframe", backend, n_servers, ops, span,
                      net=cl.sim.snapshot()["net"],
                      extra={"use_tbox": use_tbox, "use_spawn_to": use_spawn_to,
-                            "batch_io": batch_io})
+                            "batch_io": batch_io,
+                            "coalesce": "auto" if auto else "manual",
+                            "result_digest": digest})
 
 
 def plain_dataframe_us(n_columns: int = 8, chunks_per_column: int = 32,

@@ -11,6 +11,14 @@ going from one to two nodes).
 The bucket mutex guards only the chain walk (as in Memcached); value
 processing happens outside the lock.  Workload: 90% GET / 10% SET over
 zipf(0.99) keys (YCSB defaults).
+
+``prefetch_window=W`` (drust only) speculatively fetches the value nodes
+of the next W queued keys before taking the bucket lock — the fetch
+overlaps the chain walk, and the value deref pays only a deferred
+completion fence (``late_fences``).  Unlike GEMM's immutable tiles, SETs
+race the lookahead: a write landing on a prefetched-but-unused node
+invalidates its speculative copy (``wasted_prefetches``) — the
+ownership-transfer visibility rule is what keeps the speculation safe.
 """
 
 from __future__ import annotations
@@ -28,7 +36,8 @@ def run_kvstore(n_servers: int, backend: str = "drust",
                 n_keys: int = 4096, value_bytes: int = 1024,
                 n_ops: int = 3000, get_frac: float = 0.9,
                 workers_per_server: int = 4, cores: int = 16,
-                nodes_per_bucket: int = 2, seed: int = 0) -> AppResult:
+                nodes_per_bucket: int = 2, prefetch_window: int = 0,
+                seed: int = 0) -> AppResult:
     cl = make_cluster(n_servers, backend, cores)
     rng = np.random.default_rng(seed)
     boot = cl.main_thread(0)
@@ -57,6 +66,18 @@ def run_kvstore(n_servers: int, backend: str = "drust",
         b, j = divmod(key, nodes_per_bucket)
         mtx, nodes = buckets[b]
 
+        if prefetch_window:
+            # Lookahead: this worker's next queued keys — fetches overlap
+            # the lock walk; a SET racing the window wastes its prefetch.
+            ahead = []
+            for i2 in range(i + len(ths), i + len(ths) * (prefetch_window + 1),
+                            len(ths)):
+                if i2 >= n_ops:
+                    break
+                b2, j2 = divmod(int(keys[i2]), nodes_per_bucket)
+                ahead.append(buckets[b2][1][j2])
+            cl.backend.prefetch(th, ahead)
+
         # Lock guards the chain walk only (hash + j pointer hops).
         def chain_walk(_obj, th=th, j=j):
             for _ in range(j + 1):
@@ -71,7 +92,8 @@ def run_kvstore(n_servers: int, backend: str = "drust",
             cl.backend.write(th, nodes[j], bytes(value_bytes))
 
     return AppResult("kvstore", backend, n_servers, n_ops, cl.makespan_us(),
-                     net=cl.sim.snapshot()["net"])
+                     net=cl.sim.snapshot()["net"],
+                     extra={"prefetch_window": prefetch_window})
 
 
 def plain_kvstore_us(n_ops: int = 3000, value_bytes: int = 1024,

@@ -8,11 +8,21 @@ DRust's win (Fig. 5b): no serialize/deserialize compute, no redundant
 copies, one one-sided READ per actual use.
 
 ``by_value=True`` reproduces the original (non-DSM) distributed baseline.
-``batch_io=True`` (default) lets each service drain its inbox and fetch the
-whole batch of referenced payloads through the doorbell-coalesced I/O plane
-(one fetch round per source server per drain instead of one verb per
-request); ``batch_io=False`` keeps the legacy per-object path — protocol
-state ends up identical either way, only the verb accounting coalesces.
+
+``coalesce`` selects who batches the I/O:
+
+* ``"auto"`` (default, drust + batched plane only) — the services run the
+  *plain* per-request send/recv/deref loop with zero drain/fetch
+  choreography; the runtime stages the reference sends per (sender,
+  destination) pair and registers the derefs, coalescing both into wire
+  messages / ``read_many`` doorbells at quantum close (see
+  ``core/runtime.py``'s ``DerefCoalescer``).
+* ``"manual"`` — the PR-1 hand-batched choreography: every service drains
+  its inbox per request class and fetches the batch through one explicit
+  ``read_many`` (kept for A/B; this is what the golden fixtures pin).
+
+``batch_io=False`` keeps the legacy per-object plane — protocol state ends
+up identical in every mode, only the verb accounting coalesces.
 ``qps_per_thread``/``ooo``/``cost`` select the completion model (multi-QP
 out-of-order plane vs the legacy in-order plane; see ``core/net.py``).
 """
@@ -32,14 +42,27 @@ STORE_PROC_CYCLES = 30_000         # storage-service write path
 RPC_STACK_CYCLES = 40_000          # Thrift/HTTP stack per side, cross-server
 
 
+def drain_order(class_map: dict) -> list:
+    """Deterministic inbox-drain order for the manual batched plane: the
+    per-class map is keyed ``(k, src_server)`` and drained in sorted key
+    order, whatever order the classes were built in — golden counters must
+    depend on the workload, not on dict-insertion iteration."""
+    return sorted(class_map)
+
+
 def run_socialnet(n_servers: int, backend: str = "drust",
                   n_requests: int = 400, media_frac: float = 0.25,
                   workers_per_server: int = 4, cores: int = 16,
                   by_value: bool = False, batch_io: bool = True,
-                  qps_per_thread: int = 1, ooo: bool = False,
-                  cost=None, seed: int = 0) -> AppResult:
+                  coalesce: str = "auto", qps_per_thread: int = 1,
+                  ooo: bool = False, cost=None, seed: int = 0) -> AppResult:
+    # The runtime deref coalescer needs ownership borrows + the batched
+    # plane; every other configuration runs the manual choreography.
+    auto = (coalesce == "auto" and backend == "drust" and batch_io
+            and not by_value)
     cl = make_cluster(n_servers, backend, cores, batch_io=batch_io,
-                      qps_per_thread=qps_per_thread, ooo=ooo, cost=cost)
+                      qps_per_thread=qps_per_thread, ooo=ooo, cost=cost,
+                      coalesce="auto" if auto else "manual")
     rng = np.random.default_rng(seed)
     boot = cl.main_thread(0)
 
@@ -64,30 +87,35 @@ def run_socialnet(n_servers: int, backend: str = "drust",
     # and receives are separate sub-phases so independent requests overlap
     # (the FIFO happens-before only orders each message, not the batch).
     inflight: list = [None] * n_requests
+    digest = 0                                     # fetched payload bytes
     for i in range(n_requests):                    # stage 0: compose
         th0 = stage_workers[0][i % len(ths)]
         cl.sim.compute(th0, POST_PROC_CYCLES)
         inflight[i] = cl.backend.alloc(th0, nbytes_of[i],
                                        bytes(min(nbytes_of[i], 4096)))
-    # Requests in the same class k = i % len(ths) share their (src, dst)
-    # worker pair in every stage — the batched plane coalesces each class's
-    # messages/fetches, which changes no pairing and no worker assignment.
-    batched = batch_io and not by_value
-    classes = [[i for i in range(n_requests) if i % len(ths) == k]
-               for k in range(len(ths))]
+    batched = batch_io and not by_value and not auto
     for s in range(1, n_stages):
         chan = chans[s - 1]
         if batched:
-            for k, idxs in enumerate(classes):     # send sub-phase: one wire
-                if not idxs:                       # message per worker pair
-                    continue
+            # Manual choreography: requests in the same class k = i %
+            # len(ths) share their (src, dst) worker pair in every stage —
+            # one wire message and one batched fetch per class, drained in
+            # the deterministic (k, src server) order.
+            class_map: dict = {}
+            for k in range(len(ths)):
+                idxs = [i for i in range(n_requests) if i % len(ths) == k]
+                if idxs:
+                    class_map[(k, stage_workers[s - 1][k].server)] = idxs
+            for key in drain_order(class_map):     # send sub-phase: one wire
+                k, _src = key                      # message per worker pair
+                idxs = class_map[key]
                 src = stage_workers[s - 1][k]
                 dst = stage_workers[s][k]
                 chan.recv_server = dst.server
                 chan.send_many(src, [inflight[i] for i in idxs])
-            for k, idxs in enumerate(classes):     # recv sub-phase: drain the
-                if not idxs:                       # inbox, then batched fetch
-                    continue
+            for key in drain_order(class_map):     # recv sub-phase: drain the
+                k, _src = key                      # inbox, then batched fetch
+                idxs = class_map[key]
                 dst = stage_workers[s][k]
                 handles = []
                 for i in idxs:
@@ -97,7 +125,8 @@ def run_socialnet(n_servers: int, backend: str = "drust",
                     cl.sim.compute(dst, proc)
                     handles.append(handle)
                     inflight[i] = handle
-                cl.backend.read_many(dst, handles)
+                for data in cl.backend.read_many(dst, handles):
+                    digest += len(data)
             continue
         for i in range(n_requests):                # send sub-phase
             src = stage_workers[s - 1][i % len(ths)]
@@ -121,13 +150,17 @@ def run_socialnet(n_servers: int, backend: str = "drust",
             proc = STORE_PROC_CYCLES if s == n_stages - 1 else POST_PROC_CYCLES
             cl.sim.compute(dst, proc)
             if not by_value:
-                cl.backend.read(dst, handle)       # fetch on dereference
+                data = cl.backend.read(dst, handle)   # fetch on dereference
+                digest += len(data)
             inflight[i] = handle
 
+    span = cl.makespan_us()                        # settles pending quanta
     return AppResult("socialnet", backend if not by_value else "original",
-                     n_servers, n_requests, cl.makespan_us(),
+                     n_servers, n_requests, span,
                      net=cl.sim.snapshot()["net"],
-                     extra={"batch_io": batch_io and not by_value})
+                     extra={"batch_io": batch_io and not by_value,
+                            "coalesce": "auto" if auto else "manual",
+                            "payload_digest": digest})
 
 
 def plain_socialnet_us(n_requests: int = 400, media_frac: float = 0.25,

@@ -18,12 +18,15 @@ from .jaxstate import (ColoredAddr, OwnedState, ReplicaSlot, StateCache,
 from .net import CostModel, IOBatch, NetStats, Sim, WritebackQueue
 from .ownership import (BorrowError, DBox, DrustBackend, DrustRuntime, MutRef,
                         Ref, StackRef)
-from .runtime import Cluster, GlobalController, Scheduler, Thread
+from .runtime import (Cluster, CoalescePolicy, DerefCoalescer,
+                      GlobalController, Scheduler, Thread)
 from .sync import DAtomic, DMutex
 
 __all__ = [
-    "addr", "BorrowError", "Channel", "Cluster", "ColoredAddr", "CostModel",
-    "DAtomic", "DBox", "DMutex", "DrustBackend", "DrustRuntime", "GamBackend",
+    "addr", "BorrowError", "Channel", "Cluster", "CoalescePolicy",
+    "ColoredAddr", "CostModel",
+    "DAtomic", "DBox", "DerefCoalescer", "DMutex", "DrustBackend",
+    "DrustRuntime", "GamBackend",
     "GHandle", "GlobalController", "GlobalHeap", "GrappaBackend", "IOBatch",
     "LocalCache", "MutRef", "NetStats", "Obj", "OwnedState", "Partition",
     "Ref", "ReplicaSlot", "Replicator", "Scheduler", "Sim", "StackRef",

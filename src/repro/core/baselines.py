@@ -203,6 +203,11 @@ class GamBackend:
             vals[i] = self.caches[th.server][raw]
         return [vals[i] for i in range(len(handles))]
 
+    def prefetch(self, th, handles) -> int:
+        """Directory protocols have no ownership signal to make speculation
+        safe — prefetch is a no-op (apps run unmodified)."""
+        return 0
+
     def update(self, th, h: GHandle, fn: Callable[[Any], Any]) -> Any:
         val = fn(self.read(th, h))
         self.write(th, h, val)
@@ -332,6 +337,10 @@ class GrappaBackend:
             for i in idxs:
                 vals[i] = _clone(self.heap.get(handles[i].raw).data)
         return [vals[i] for i in range(len(handles))]
+
+    def prefetch(self, th, handles) -> int:
+        """Delegation has no caches to prefetch into — no-op."""
+        return 0
 
     def write(self, th, h: GHandle, data: Any) -> None:
         self._delegate(th, h, h.size, 0, mutates=True)

@@ -17,6 +17,12 @@ Two structures keep every hot-path operation O(1) amortized:
   of scanning the whole map.
 * ``bytes_cached`` — a counter maintained on insert/remove/invalidate/evict
   (it used to be a full scan summing partition sizes).
+* ``_by_cid`` — speculative-prefetch index from a prefetch doorbell's
+  completion id to the colored keys it fetched, so a transfer/mutation
+  before first use invalidates exactly that doorbell's entries
+  (``invalidate_cid``) in O(1).  A speculative entry that leaves the cache
+  any other way (eviction, B.4 invalidation, insert-replace) fires the
+  ``on_spec_drop`` hook so the runtime can record the cid as wasted.
 
 Eviction under memory pressure is CLOCK-style second chance: ``lookup`` sets
 a reference bit, ``evict_clock`` sweeps a persistent hand, giving recently
@@ -38,6 +44,8 @@ class CacheEntry:
     refcount: int
     size: int = 0       # copy size, captured at insert (for bytes_cached)
     ref_bit: bool = True  # CLOCK second-chance bit
+    speculative: bool = False  # prefetched, completion fence still deferred
+    cid: int = 0        # completion id of the speculative fetch doorbell
 
 
 class LocalCache:
@@ -46,10 +54,16 @@ class LocalCache:
         self.partition = partition
         self.entries: dict[int, CacheEntry] = {}   # colored g -> entry
         self._by_raw: dict[int, set[int]] = {}     # raw -> colored keys
+        self._by_cid: dict[int, set[int]] = {}     # spec cid -> colored keys
         self._bytes = 0
         self._hand = 0                             # CLOCK hand (key index)
         self.hits = 0
         self.misses = 0
+        # Runtime hook: a *speculative* entry left the cache without being
+        # materialized (evicted / B.4-invalidated) — the runtime records the
+        # cid's disposition so every speculative fetch is fenced or
+        # invalidated exactly once.
+        self.on_spec_drop = lambda cid: None
 
     def lookup(self, colored_g: int) -> CacheEntry | None:
         e = self.entries.get(colored_g)
@@ -60,17 +74,57 @@ class LocalCache:
             self.misses += 1
         return e
 
-    def insert(self, colored_g: int, local_raw: int, refcount: int = 1) -> CacheEntry:
+    def insert(self, colored_g: int, local_raw: int, refcount: int = 1,
+               speculative: bool = False, cid: int = 0) -> CacheEntry:
         size = (self.partition.get(local_raw).size
                 if self.partition.contains(local_raw) else 0)
         old = self.entries.get(colored_g)
         if old is not None:
             self._drop_index(colored_g, old)
-        e = CacheEntry(local_raw, refcount, size=size)
+        e = CacheEntry(local_raw, refcount, size=size,
+                       speculative=speculative, cid=cid)
         self.entries[colored_g] = e
         self._by_raw.setdefault(A.clear_color(colored_g), set()).add(colored_g)
+        if speculative:
+            self._by_cid.setdefault(cid, set()).add(colored_g)
         self._bytes += size
         return e
+
+    def materialize(self, colored_g: int) -> None:
+        """First materialized use of a speculative entry: the completion
+        fence ran — the entry becomes a regular warm copy."""
+        e = self.entries.get(colored_g)
+        if e is None or not e.speculative:
+            return
+        e.speculative = False
+        keys = self._by_cid.get(e.cid)
+        if keys is not None:
+            keys.discard(colored_g)
+            if not keys:
+                del self._by_cid[e.cid]
+
+    def invalidate_cid(self, cid: int) -> int:
+        """Kill every still-speculative entry of a prefetch doorbell (the
+        source moved ownership / mutated before first use).  Returns the
+        number of entries dropped.  Does NOT fire ``on_spec_drop`` — the
+        caller is the runtime, already recording the disposition."""
+        victims = self._by_cid.pop(cid, None)
+        if not victims:
+            return 0
+        n = 0
+        for g in victims:
+            e = self.entries.pop(g, None)
+            if e is None:
+                continue
+            raw_keys = self._by_raw.get(A.clear_color(g))
+            if raw_keys is not None:
+                raw_keys.discard(g)
+                if not raw_keys:
+                    del self._by_raw[A.clear_color(g)]
+            self._bytes -= e.size
+            self._free_copy(e)
+            n += 1
+        return n
 
     def inc(self, colored_g: int) -> CacheEntry:
         e = self.entries[colored_g]
@@ -96,6 +150,13 @@ class LocalCache:
             if not keys:
                 del self._by_raw[raw]
         self._bytes -= e.size
+        if e.speculative:
+            cids = self._by_cid.get(e.cid)
+            if cids is not None:
+                cids.discard(colored_g)
+                if not cids:
+                    del self._by_cid[e.cid]
+            self.on_spec_drop(e.cid)
 
     def _free_copy(self, e: CacheEntry) -> int:
         if self.partition.contains(e.local):
@@ -117,6 +178,13 @@ class LocalCache:
             if e is None:
                 continue
             self._bytes -= e.size
+            if e.speculative:
+                cids = self._by_cid.get(e.cid)
+                if cids is not None:
+                    cids.discard(g)
+                    if not cids:
+                        del self._by_cid[e.cid]
+                self.on_spec_drop(e.cid)
             self._free_copy(e)
             n += 1
         return n

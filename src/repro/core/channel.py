@@ -8,6 +8,15 @@ message of the pointer bytes; same-server sends are queue ops.
 
 This is the mechanism behind the SocialNet result: pass-by-reference RPC
 eliminates the serialize/deserialize cycle entirely.
+
+Under ``Cluster(coalesce="auto")`` reference sends are *staged*: the
+runtime buffers them per (sender, destination) and rings one wire message
+per pair at the quantum settle point — a receiver's first ``recv`` or
+``Cluster.close_quanta()`` — the runtime-policy counterpart of the
+hand-written ``send_many`` drain.  Values are delivered in original send
+order, so program-visible FIFO semantics are unchanged; only the wire
+accounting coalesces.  By-value sends (``nbytes`` given) are never staged:
+the payload copy is the cost being measured in that baseline.
 """
 
 from __future__ import annotations
@@ -25,10 +34,21 @@ class Channel:
         self.capacity = capacity
         self.sent = 0
         self.recv_server: int | None = None   # pinned at rx() time
+        self._staged: list = []               # [(value, sender th, dst server)]
+        chans = getattr(cluster, "channels", None)
+        if chans is not None:
+            chans.append(self)                # Cluster.close_quanta settles us
+
+    def _auto(self) -> bool:
+        return getattr(self.cluster, "coalesce", "manual") == "auto"
 
     def send(self, th, value: Any, nbytes: int | None = None) -> None:
         """``nbytes`` is the wire size: pointer words for references (the
         DRust fast path), or the full payload for by-value sends."""
+        if nbytes is None and self._auto():
+            self._staged.append((value, th, self.recv_server))
+            self.sent += 1
+            return
         sim = self.cluster.sim
         wire = POINTER_BYTES if nbytes is None else nbytes
         if self.recv_server is not None and self.recv_server != th.server:
@@ -54,7 +74,31 @@ class Channel:
             self.q.append((v, th.t_us))
         self.sent += len(values)
 
+    def flush_sends(self) -> None:
+        """Settle staged sends: one wire message per (sender, destination
+        server) pair carrying that pair's pointer words; values enqueue in
+        original send order (FIFO preserved)."""
+        if not self._staged:
+            return
+        sim = self.cluster.sim
+        staged, self._staged = self._staged, []
+        groups: dict[tuple[int, int | None], list] = {}
+        for v, th, dst in staged:
+            groups.setdefault((th.tid, dst), []).append(th)
+        t_of: dict[tuple[int, int | None], float] = {}
+        for key, senders in groups.items():
+            th, dst = senders[0], key[1]
+            if dst is not None and dst != th.server:
+                sim.rpc(th, dst, req_bytes=POINTER_BYTES * len(senders),
+                        resp_bytes=0)
+            else:
+                sim.local_access(th)
+            t_of[key] = th.t_us
+        for v, th, dst in staged:
+            self.q.append((v, t_of[(th.tid, dst)]))
+
     def recv(self, th) -> Any:
+        self.flush_sends()                   # staged sends land before drain
         sim = self.cluster.sim
         self.recv_server = th.server
         sim.local_access(th)
@@ -63,4 +107,4 @@ class Channel:
         return value
 
     def __len__(self) -> int:
-        return len(self.q)
+        return len(self.q) + len(self._staged)

@@ -69,6 +69,13 @@ completion model:
   before an earlier-posted verb on a sibling QP (``ooo_completions`` counts
   these inversions per posting thread).
 
+Speculative prefetch rides the same completion plane: ``post_read`` posts a
+one-sided READ doorbell off the critical path (``speculative_fetches``), the
+runtime records the cid on the prefetched ``DBox``, and the fence is deferred
+to the first *materialized* use (``late_fences``) — or never happens, when
+ownership moves or the owner mutates before first use and the speculatively
+fetched cache entry is invalidated instead (``wasted_prefetches``).
+
 Fences wait on **completion ids**, not queues: ``fence(th, upto_id)`` blocks
 ``th`` until every still-pending verb with ``cid <= upto_id`` has completed
 (a CQ-order fence may over-wait on unrelated earlier verbs — that is what a
@@ -146,6 +153,9 @@ class NetStats:
     fenced_verbs: int = 0               # verbs retired by a completion fence
     ooo_completions: int = 0            # completions beating an earlier cid
     qp_switches: int = 0                # doorbell rung on a different QP
+    speculative_fetches: int = 0        # prefetch doorbells posted off-path
+    late_fences: int = 0                # fences deferred to first use
+    wasted_prefetches: int = 0          # speculative entries killed unused
 
     def total_msgs(self) -> int:
         return (self.one_sided_reads + self.one_sided_writes
@@ -153,9 +163,11 @@ class NetStats:
 
     def critical_path_msgs(self) -> int:
         """Synchronous messages a thread actually waited on; DRust's
-        invalidation/dealloc traffic and pipelined write-backs are
-        asynchronous by design and reported separately."""
-        return self.total_msgs() - self.async_msgs - self.async_writebacks
+        invalidation/dealloc traffic, pipelined write-backs, and
+        speculative prefetch READs are asynchronous by design and
+        reported separately."""
+        return (self.total_msgs() - self.async_msgs - self.async_writebacks
+                - self.speculative_fetches)
 
 
 @dataclass
@@ -276,6 +288,7 @@ class WritebackQueue:
     def __init__(self, sim: "Sim"):
         self.sim = sim
         self._bw_tail: dict[int, float] = {}     # legacy: dst -> wire busy-until
+        self._bw_tail_rd: dict[int, float] = {}  # legacy: src -> read-wire tail
         self._pending: dict[int, _Verb] = {}     # cid -> verb, insertion = cid order
         self._retired: dict[int, float] = {}     # fenced cid -> completion time
         self._retired_hi = (0, 0.0)  # (highest retired cid, max retired done)
@@ -316,6 +329,41 @@ class WritebackQueue:
         net.bytes_moved += nbytes
         sim.servers[dst_server].bytes_in += nbytes
         sim.servers[th.server].bytes_out += nbytes
+        return cid
+
+    def post_read(self, th, src_server: int, nbytes: int,
+                  n_verbs: int = 1) -> int:
+        """Post a *speculative* one-sided READ doorbell (``n_verbs``
+        coalesced WQEs pulling ``nbytes`` total from ``src_server``) and
+        return its completion id.  The poster pays only the issue cost —
+        the completion surfaces at a fence (the deferred first-use fence,
+        an ownership-transfer dependency, or B.4 dealloc) or as a floor on
+        ``makespan_us``.  Same completion models as ``post``; the legacy
+        plane serializes reads on a per-*source* wire, independent of the
+        write-back tails (READs come out of a link, WRITEs go into it)."""
+        sim, cost, net = self.sim, self.sim.cost, self.sim.net
+        th.t_us += cost.wb_issue_us + cost.doorbell_us * (n_verbs - 1)
+        tid = getattr(th, "tid", 0)
+        cid = sim.next_cid()
+        if not sim.ooo:
+            wire = (max(th.t_us, self._bw_tail_rd.get(src_server, 0.0))
+                    + cost.xfer_us(nbytes))
+            self._bw_tail_rd[src_server] = wire
+            done = wire + cost.one_sided_base_us
+        else:
+            done = sim.qp_complete(th, src_server, nbytes, n_verbs=n_verbs)
+            prior_max = self._pending_maxdone(tid)
+            if prior_max > done:
+                net.ooo_completions += 1
+            self._tid_maxdone[tid] = max(prior_max, done)
+        self._pending[cid] = _Verb(cid, tid, src_server, nbytes, done)
+        self._max_cid = cid
+        self.posted += 1
+        net.one_sided_reads += 1
+        net.speculative_fetches += 1
+        net.bytes_moved += nbytes
+        sim.servers[src_server].bytes_out += nbytes
+        sim.servers[th.server].bytes_in += nbytes
         return cid
 
     # ---- fences --------------------------------------------------------
@@ -379,6 +427,7 @@ class WritebackQueue:
         net.wb_drains += 1
         if not self._pending:
             self._bw_tail.clear()
+            self._bw_tail_rd.clear()
         return t
 
     def fence_all(self, th) -> float:
@@ -405,6 +454,7 @@ class WritebackQueue:
         self._tid_maxdone.pop(tid, None)
         if not self._pending:
             self._bw_tail.clear()
+            self._bw_tail_rd.clear()
         self.sim._forget_tid(tid)
         return len(mine)
 
@@ -415,6 +465,7 @@ class WritebackQueue:
         in a later epoch (elastic rescale) start clean."""
         self._pending.clear()
         self._bw_tail.clear()
+        self._bw_tail_rd.clear()
         self._retired.clear()
         self._retired_hi = (0, 0.0)
         self._retired_floor = 0.0

@@ -74,7 +74,7 @@ class DBox:
     """Owner pointer (DRust's ``DBox<T>``, re-implemented ``Box``)."""
 
     __slots__ = ("g", "l", "u", "home", "rt", "live_refs", "live_mut",
-                 "dropped", "tied", "wb_cids")
+                 "dropped", "tied", "wb_cids", "fetch_cid", "fetch_server")
 
     def __init__(self, rt: "DrustRuntime", g: int, home: int, tied: bool = False):
         self.rt = rt
@@ -87,6 +87,8 @@ class DBox:
         self.dropped = False
         self.tied = tied    # this owner is a TBox (affinity-tied to a parent)
         self.wb_cids: list[int] = []   # in-flight write-back completion ids
+        self.fetch_cid = 0             # in-flight speculative prefetch cid
+        self.fetch_server: int | None = None   # server that prefetched
 
     def __repr__(self):
         return (f"DBox(g={A.clear_color(self.g):#x}c{A.get_color(self.g)}, "
@@ -103,8 +105,10 @@ class DBox:
 
     def borrow_mut(self, th) -> "MutRef":
         self._check_live()
+        self.rt._coalesce_conflict(self)    # flush pending registered derefs
         if self.live_mut or self.live_refs:
             raise BorrowError("mutable borrow while other borrows alive")
+        self.rt._invalidate_prefetch(self)  # speculative bytes go stale
         self._release_pin()                 # owner's cached copy unpinned
         self.live_mut = True
         return MutRef(self.rt, self.g, owner=self, u=self.u)
@@ -150,6 +154,7 @@ class Ref:
             sim.busy(th, sim.cost.hashmap_us)
             e = H.lookup(self.g)
             if e is not None:                                # lines 7-10
+                rt._touch_spec(th, H, self.g, e, self.owner)
                 self.l = e.local
                 e.refcount += 1
             else:                                            # lines 11-13
@@ -311,6 +316,18 @@ class DrustRuntime:
         self.on_alloc: Callable[[int], None] = lambda raw: None
         self.on_free: Callable[[int], None] = lambda raw: None
         self.on_transfer: Callable[[int], None] = lambda raw: None
+        # Deref coalescer (installed by Cluster under ``coalesce="auto"``);
+        # None = every deref fetches eagerly (the manual plane).
+        self.coalescer = None
+        # Speculative-prefetch ledger: every posted prefetch cid, and its
+        # disposition ("fenced" at first use | "invalidated" before use).
+        # The staleness-safety property suite checks every cid is disposed
+        # exactly once.
+        self.spec_cids: list[int] = []
+        self.spec_log: dict[int, str] = {}
+        for H in self.caches:
+            H.on_spec_drop = (
+                lambda cid: self._dispose_spec(cid, "invalidated"))
 
     # ---- allocation ------------------------------------------------------
     def alloc(self, th, size: int, data: Any, server: int | None = None,
@@ -366,6 +383,7 @@ class DrustRuntime:
             sim.busy(th, sim.cost.hashmap_us)
             e = H.lookup(box.g)
             if e is not None:
+                self._touch_spec(th, H, box.g, e, box)
                 box.l = e.local
                 e.refcount += 1
             else:
@@ -378,8 +396,10 @@ class DrustRuntime:
                     data: Any = None) -> Any:
         """Algorithm 8 (incl. adopting an existing local cache copy)."""
         box._check_live()
+        self._coalesce_conflict(box)
         if box.live_mut or box.live_refs:
             raise BorrowError("owner write while borrows alive")
+        self._invalidate_prefetch(box)
         box._release_pin()
         sim = self.sim
         sim.deref_check(th)
@@ -433,6 +453,7 @@ class DrustRuntime:
         (instead of one per object), and one invalidation scrub per cache."""
         if box.dropped:
             return
+        self._coalesce_conflict(box)
         if box.live_mut or box.live_refs:
             raise BorrowError("drop while borrows alive")
         stack, group = [box], []
@@ -441,6 +462,7 @@ class DrustRuntime:
             b = stack.pop()
             if b.dropped:
                 continue
+            self._coalesce_conflict(b)
             if b.live_mut or b.live_refs:
                 raise BorrowError("drop while borrows alive")
             b._release_pin()
@@ -448,6 +470,12 @@ class DrustRuntime:
             if b.wb_cids:
                 wb_upto = max(wb_upto, max(b.wb_cids))
                 b.wb_cids.clear()
+            if b.fetch_cid:
+                # B.4 dealloc: an in-flight speculative READ of the dropped
+                # slots must complete before they are freed — fence its cid
+                # like a write-back; the unused entries are invalidated.
+                wb_upto = max(wb_upto, b.fetch_cid)
+                self._invalidate_prefetch(b)
             raw = A.clear_color(b.g)
             if not self.heap.contains(raw):
                 continue
@@ -486,6 +514,7 @@ class DrustRuntime:
     def transfer(self, th_src, box: DBox, dst_server: int) -> None:
         """Ownership transfer between threads/servers (D.2): only the pointer
         moves; the source server's cache copy is deallocated."""
+        self._coalesce_conflict(box)
         if box.live_mut or box.live_refs:
             raise BorrowError("transfer while borrows alive")
         if box.l != A.NULL:
@@ -500,8 +529,12 @@ class DrustRuntime:
             box.l = A.NULL
         # §4.2.3: ownership transfer is the visibility point — fence exactly
         # the write-back completion ids this pointer depends on (the box's
-        # own and its tied children's); later verbs stay in flight.
-        upto = self._take_wb_deps(box)
+        # own and its tied children's), plus any in-flight speculative
+        # prefetch of the moving closure (the NIC's READ must complete
+        # before the object can move; the unused speculative entries are
+        # invalidated — ownership moved before first use).  Later verbs
+        # stay in flight.
+        upto = max(self._take_wb_deps(box), self._take_spec_deps(box))
         if upto:
             self.sim.wb.fence(th_src, upto)
         self.sim.rpc(th_src, dst_server, req_bytes=16)   # ship the pointer
@@ -526,6 +559,150 @@ class DrustRuntime:
                     upto = max(upto, max(child.wb_cids))
                     child.wb_cids.clear()
         return upto
+
+    def _take_spec_deps(self, box: DBox) -> int:
+        """Speculative-fetch analogue of ``_take_wb_deps``: collect (and
+        clear) the in-flight prefetch cids of ``box`` and its TBox closure,
+        invalidating their unused speculative cache entries.  Returns the
+        highest dependent cid (0 = none)."""
+        boxes = [box]
+        raw = A.clear_color(box.g)
+        if self.heap.contains(raw):
+            for a in self._group(raw):
+                child = self.owner_of.get(a)
+                if child is not None and child is not box:
+                    boxes.append(child)
+        upto = 0
+        for b in boxes:
+            if b.fetch_cid:
+                upto = max(upto, b.fetch_cid)
+                self._invalidate_prefetch(b)
+        return upto
+
+    # ---- speculative prefetch ------------------------------------------
+    def _dispose_spec(self, cid: int, how: str) -> bool:
+        """Record a speculative cid's disposition exactly once: ``fenced``
+        (materialized at first use) or ``invalidated`` (killed before use).
+        Returns False when the cid was already disposed."""
+        if cid == 0 or cid in self.spec_log:
+            return False
+        self.spec_log[cid] = how
+        if how == "fenced":
+            self.sim.net.late_fences += 1
+        else:
+            self.sim.net.wasted_prefetches += 1
+        return True
+
+    def _spec_outstanding(self, box: DBox) -> bool:
+        """True while ``box``'s recorded prefetch cid is still undisposed.
+        A cid disposed elsewhere (a sibling's materialization, eviction,
+        B.4 invalidation — paths that cannot reach the box handle) is
+        cleared lazily here, so a dead cid never blocks future prefetches
+        of the box."""
+        if box.fetch_cid and box.fetch_cid not in self.spec_log:
+            return True
+        box.fetch_cid = 0
+        box.fetch_server = None
+        return False
+
+    def _invalidate_prefetch(self, box: DBox) -> None:
+        """The source is about to mutate / move ownership / dealloc while a
+        speculative fetch of it is outstanding and unused: kill the whole
+        doorbell's speculative entries (the bytes may go stale) and record
+        the cid as wasted.  No-op when nothing undisposed is in flight."""
+        cid = box.fetch_cid
+        srv = box.fetch_server
+        box.fetch_cid = 0
+        box.fetch_server = None
+        if not cid or cid in self.spec_log:
+            return
+        if srv is not None:
+            self.caches[srv].invalidate_cid(cid)
+        self._dispose_spec(cid, "invalidated")
+
+    def _touch_spec(self, th, H: LocalCache, colored_g: int, e,
+                    owner: DBox | None) -> None:
+        """First materialized use of a cache entry: if it is speculative,
+        run the deferred completion-id fence (a *late* fence — the latency
+        the prefetch hid) and promote it to a regular warm copy.  The
+        fence is unconditional: a sibling entry of an already-disposed
+        doorbell must still wait for the READ's completion time (the
+        retired-cid record keeps it); only the disposition/counter is
+        once-per-cid."""
+        if not e.speculative:
+            return
+        self._dispose_spec(e.cid, "fenced")
+        self.sim.wb.fence(th, e.cid)
+        H.materialize(colored_g)
+        if owner is not None and owner.fetch_cid == e.cid:
+            owner.fetch_cid = 0
+            owner.fetch_server = None
+
+    def prefetch(self, th, boxes) -> int:
+        """Speculative fetch (§4.2 follow-on): post one read doorbell per
+        cold remote box (its whole TBox group coalesced, like ``_copy_in``)
+        *without* waiting — the poster pays only the issue cost.  The
+        completion id is recorded on the box and on the speculative cache
+        entries; the fence is deferred to the first materialized use
+        (``Ref.deref`` / ``owner_read`` / ``read_many`` hit).  Ownership
+        transfer, ``drop_box``, B.4 dealloc, and owner mutation fence or
+        invalidate in-flight prefetches exactly like write-backs.  No
+        borrow is taken — that is what makes the fetch speculative, and
+        why a pre-use mutation wastes it instead of blocking.
+
+        Returns the number of doorbells posted.  Boxes that are local,
+        already cached, already in flight, mutably borrowed, or dropped
+        are skipped."""
+        if not self.batch_io:
+            return 0                     # naive plane: no speculation
+        H = self.caches[th.server]
+        posted = 0
+        for b in boxes:
+            if (b.dropped or b.live_mut or self._spec_outstanding(b)
+                    or A.server_of(b.g) == th.server
+                    or b.g in H.entries):
+                continue
+            raw = A.clear_color(b.g)
+            if not self.heap.contains(raw):
+                continue
+            src = A.server_of(raw)
+            members = []
+            for a in self._group(raw):
+                if A.server_of(a) != src:
+                    continue     # member moved off the root's server (its
+                    #              own deref/prefetch fetches it from there)
+                key = (b.g if a == raw
+                       else A.append_color(a, self.obj_color.get(a, 0)))
+                if key not in H.entries:
+                    members.append((a, key))
+            if not members:
+                continue
+            total = sum(self.heap.get(a).size for a, _ in members)
+            cid = self.sim.wb.post_read(th, src, total,
+                                        n_verbs=len(members))
+            part = self.heap.partitions[th.server]
+            for a, key in members:
+                obj = self.heap.get(a)
+                local = part.alloc(obj.size, _clone(obj.data))
+                self.sim.busy(th, self.sim.cost.alloc_us)
+                H.insert(key, local, refcount=0, speculative=True, cid=cid)
+                # Every fetched member records the cid — a mutation of a
+                # tied *child* before first use must waste the whole
+                # doorbell, not just a root-recorded one.
+                owner = self.owner_of.get(a)
+                if owner is not None:
+                    owner.fetch_cid = cid
+                    owner.fetch_server = th.server
+            self.spec_cids.append(cid)
+            posted += 1
+        return posted
+
+    def _coalesce_conflict(self, box: DBox) -> None:
+        """A mutable op / transfer / drop is about to touch ``box``: any
+        *registered-but-unflushed* derefs hold immutable borrows on it —
+        close those threads' quanta first (flush their coalesced fetch)."""
+        if self.coalescer is not None:
+            self.coalescer.flush_box(box)
 
     def _group(self, raw: int) -> list[int]:
         return self.heap.tie_closure(raw)
@@ -628,6 +805,11 @@ class DrustRuntime:
             self._relocate_tie_links(a, remap[a], moved=remap)
             if owner is not None and a != raw:
                 owner.g = A.append_color(remap[a], A.get_color(owner.g))
+                # The move's B.4 invalidation frees every cached copy of
+                # the old address — a child owner's read-path pin (set by
+                # owner_read) would dangle; the root's l is reset by the
+                # caller (owner_write / DropMutRef).
+                owner.l = A.NULL
         if self.batch_io:
             self.sim.async_msg(src, 16 * len(group))     # coalesced dealloc req
         else:
@@ -717,6 +899,7 @@ class DrustRuntime:
                 sim.busy(th, sim.cost.hashmap_us)
                 e = H.lookup(r.g)
                 if e is not None:
+                    self._touch_spec(th, H, r.g, e, r.owner)
                     r.l = e.local
                     e.refcount += 1
                 else:
@@ -759,10 +942,18 @@ class DrustBackend:
         return self.rt.alloc(th, size, data, server=server, tie_to=tie_to)
 
     def read(self, th, box: DBox) -> Any:
+        co = self.rt.coalescer
+        if co is not None and co.wants(th, box):
+            return co.register(th, box)
         r = box.borrow(th)
         val = r.deref(th)
         r.drop(th)
         return val
+
+    def prefetch(self, th, boxes) -> int:
+        """Speculative group fetch: post the read doorbells now, fence at
+        first materialized use (see ``DrustRuntime.prefetch``)."""
+        return self.rt.prefetch(th, boxes)
 
     def read_cached(self, th, box: DBox) -> tuple[Any, Ref]:
         """Long-lived immutable borrow (caller drops)."""

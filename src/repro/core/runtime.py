@@ -10,6 +10,15 @@
   CPU/memory, picks allocation & spawn targets, and resolves imbalance by
   migrating threads (§4.2.2 policies: mem>90% → evict the biggest-heap
   thread; cpu>90% → move remote-heavy threads toward their data).
+* ``CoalescePolicy`` / ``DerefCoalescer`` — the adaptive deref-coalescing
+  policy (``Cluster(coalesce="auto")``): non-owning derefs of remote
+  objects *register* inside the thread's scheduler quantum instead of
+  fetching, and the whole pending set materializes as per-source
+  ``read_many`` doorbells when the quantum closes — at an adaptive
+  count/byte budget, at a borrow conflict, or at an explicit settle point.
+  Registration takes the immutable borrow immediately, so the payload is
+  frozen until the flush (ownership makes the deferral coherence-exact,
+  not approximate); only the *cost* of the fetch is deferred.
 * ``Cluster`` — wires Sim + GlobalHeap + one protocol backend together; the
   single entry point used by the applications and benchmarks.
 """
@@ -17,6 +26,7 @@
 from __future__ import annotations
 
 import itertools
+import math
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -25,7 +35,7 @@ from . import addr as A
 from .baselines import GamBackend, GrappaBackend
 from .heap import GlobalHeap
 from .net import CostModel, Sim
-from .ownership import DrustBackend, DrustRuntime
+from .ownership import DrustBackend, DrustRuntime, _clone
 
 
 class Thread:
@@ -83,6 +93,9 @@ class Scheduler:
 
     def run(self, th: Thread) -> Any:
         th.result = th.fn(th, *th.args)
+        cl = self.cluster
+        if cl.backend_drust and cl.drust.coalescer is not None:
+            cl.drust.coalescer.flush(th)     # quantum closes with the fn
         th.done = True
         return th.result
 
@@ -104,8 +117,11 @@ class Scheduler:
         thread reusing the id cannot inherit stale write-back tails or QP
         rings.  The retiree's in-flight write-backs stay in the makespan."""
         th.done = True
-        self.cluster.sim.wb.forget(th.tid)
-        self.cluster.controller.thread_table.pop(th.tid, None)
+        cl = self.cluster
+        if cl.backend_drust and cl.drust.coalescer is not None:
+            cl.drust.coalescer.flush(th)     # quantum closes with the thread
+        cl.sim.wb.forget(th.tid)
+        cl.controller.thread_table.pop(th.tid, None)
 
     def migrate(self, th: Thread, dst: int) -> float:
         """Ship fn pointer + registers + stack; stack address is preserved
@@ -115,6 +131,9 @@ class Scheduler:
         src = th.server
         if src == dst:
             return 0.0
+        cl = self.cluster
+        if cl.backend_drust and cl.drust.coalescer is not None:
+            cl.drust.coalescer.flush(th)     # quantum closes on migration
         lat = (sim.cost.two_sided_rtt_us * 2                    # ctrl handshake
                + sim.cost.xfer_us(th.stack_bytes + 512)         # stack + regs
                + sim.cost.msg_proc_us * 2)
@@ -236,6 +255,167 @@ class GlobalController:
         return moved
 
 
+@dataclass
+class CoalescePolicy:
+    """Knobs for the adaptive deref coalescer.
+
+    In this cost model batching within one quantum is monotone: a flush's
+    per-server doorbells already overlap (and, under ooo, stripe across
+    the QPs), so each extra coalesced deref only amortizes the doorbell
+    base latency further — the makespan curve saturates at an
+    *amortization knee*.  What a bigger quantum does cost is deref-latency
+    **exposure**: the first registered deref materializes only when the
+    quantum closes, and on bulk mixes that window grows linearly.  The
+    adaptive budget therefore closes the quantum at the knee:
+
+        ``n* = ceil(base / (amortize_frac * per_verb_cost))``
+
+    where the marginal per-verb cost is the QP engine occupancy
+    ``max(xfer(EWMA object size), qp_msg_us)`` under the out-of-order
+    plane.  Small-object mixes → per-verb cost is the NIC message rate →
+    large quanta (the base latency is the whole cost); bulk mixes →
+    bandwidth dominates → moderate quanta (past the knee batching buys
+    ~nothing while exposure keeps growing).  Under the legacy plane there
+    is no per-QP serialization to price, so the budget sits at
+    ``pending_cap`` and quanta close at conflicts / settle points.  The
+    static knobs (``max_pending`` / ``max_bytes``) override adaptation —
+    that is what the ``coalesce_sweep`` benchmark sweeps against.
+    """
+
+    max_pending: int | None = None     # static count budget (None = adaptive)
+    max_bytes: int | None = None       # static byte budget (None = off)
+    amortize_frac: float = 0.03        # knee target: base <= frac * marginal
+    pending_cap: int = 64              # adaptive count budget ceiling
+    ewma_alpha: float = 0.25           # deref-size tracker smoothing
+
+    def budgets(self, cost, qps: int, ooo: bool,
+                ewma_bytes: float) -> tuple[int, int | None]:
+        """(count budget, byte budget or None) for the current mix."""
+        n = self.max_pending
+        if n is None:
+            if not ooo:                # legacy plane: bigger is always better
+                n = self.pending_cap
+            else:                      # price the per-QP engine occupancy
+                per_verb = max(cost.xfer_us(max(ewma_bytes, 1.0)),
+                               cost.qp_msg_us)
+                n = math.ceil(cost.one_sided_base_us
+                              / (self.amortize_frac * per_verb))
+                n = max(1, min(self.pending_cap, n))
+        return n, self.max_bytes
+
+
+class DerefCoalescer:
+    """Per-thread pending-deref registry behind ``Cluster(coalesce="auto")``.
+
+    ``register`` takes the immutable borrow and queues the deref;
+    ``flush`` closes the thread's quantum — the queued boxes go through
+    ``DrustRuntime.read_many`` (identical verbs, bytes, and end state as
+    the hand-written drain-then-fetch choreography), then the registration
+    borrows drop.  Conflicting ops (mutable borrow / owner write /
+    transfer / drop) call ``flush_box`` through the ownership layer so the
+    registered borrows can never turn a legal program into a BorrowError.
+    """
+
+    def __init__(self, rt, policy: CoalescePolicy | None = None):
+        self.rt = rt
+        self.policy = policy or CoalescePolicy()
+        self.pending: dict[int, tuple[Any, list]] = {}  # tid -> (th, [(box, ref)])
+        self.pending_bytes: dict[int, int] = {}
+        self.by_box: dict[Any, set[int]] = {}           # box -> tids (identity)
+        self.ewma_bytes = 0.0
+        self.flushes = 0
+        self.flushed_derefs = 0
+        self.registered = 0
+
+    def wants(self, th, box) -> bool:
+        """Registration applies to non-owning derefs of *cold remote*
+        objects; local, warm, speculative-hit, dropped, and mutably
+        borrowed boxes take the eager path (which raises/materializes
+        exactly as the manual plane would)."""
+        if box.dropped or box.live_mut:
+            return False
+        if A.server_of(box.g) == th.server:
+            return False
+        return box.g not in self.rt.caches[th.server].entries
+
+    def register(self, th, box) -> Any:
+        """Queue a deref; returns a *snapshot* of the payload immediately —
+        the borrow freezes it, so the bytes cannot differ from what the
+        flush materializes, and the clone matches the manual plane's
+        semantics (a reader holds a copy, never an alias of the owner's
+        heap object).  Fetch cost is charged at the flush."""
+        rt = self.rt
+        tid = th.tid
+        ent = self.pending.get(tid)
+        if ent is None:
+            ent = (th, [])
+            self.pending[tid] = ent
+            self.pending_bytes[tid] = 0
+        _, items = ent
+        if any(b is box for b, _ in items):
+            # re-deref inside the same quantum: charged like a warm re-read
+            sim = rt.sim
+            sim.deref_check(th)
+            sim.busy(th, sim.cost.hashmap_us)
+            sim.local_access(th)
+            return _clone(rt.heap.get(A.clear_color(box.g)).data)
+        ref = box.borrow(th)
+        items.append((box, ref))
+        self.by_box.setdefault(box, set()).add(tid)
+        nbytes = rt.heap.group_bytes(A.clear_color(box.g))
+        self.pending_bytes[tid] += nbytes
+        a = self.policy.ewma_alpha
+        self.ewma_bytes = (nbytes if self.ewma_bytes == 0.0
+                           else (1 - a) * self.ewma_bytes + a * nbytes)
+        self.registered += 1
+        n_budget, b_budget = self.policy.budgets(
+            rt.sim.cost, rt.sim.qps, rt.sim.ooo, self.ewma_bytes)
+        if (len(items) >= n_budget
+                or (b_budget is not None
+                    and self.pending_bytes[tid] >= b_budget)):
+            self.flush(th)
+        return _clone(rt.heap.get(A.clear_color(box.g)).data)
+
+    def flush(self, th) -> int:
+        """Close ``th``'s quantum: one coalesced ``read_many`` over the
+        pending set, then the registration borrows drop."""
+        ent = self.pending.pop(th.tid, None)
+        self.pending_bytes.pop(th.tid, None)
+        if not ent:
+            return 0
+        _, items = ent
+        for box, _ in items:
+            tids = self.by_box.get(box)
+            if tids is not None:
+                tids.discard(th.tid)
+                if not tids:
+                    self.by_box.pop(box, None)
+        self.rt.read_many(th, [b for b, _ in items])
+        for _, ref in items:
+            ref.drop(th)
+        self.flushes += 1
+        self.flushed_derefs += len(items)
+        return len(items)
+
+    def flush_box(self, box) -> None:
+        """A mutable op is about to touch ``box``: close the quantum of
+        every thread holding a registered deref on it (sorted by tid —
+        deterministic)."""
+        for tid in sorted(self.by_box.get(box, ())):
+            ent = self.pending.get(tid)
+            if ent is not None:
+                self.flush(ent[0])
+
+    def flush_all(self) -> int:
+        """Settle point (end of trace / snapshot): close every quantum."""
+        n = 0
+        for tid in sorted(self.pending):
+            ent = self.pending.get(tid)
+            if ent is not None:
+                n += self.flush(ent[0])
+        return n
+
+
 class Cluster:
     """One simulated deployment: N servers, one protocol backend."""
 
@@ -243,13 +423,17 @@ class Cluster:
                  cores_per_server: int = 16, cost: CostModel | None = None,
                  partition_bytes: int | None = None, replicate: bool = False,
                  batch_io: bool = True, qps_per_thread: int = 1,
-                 ooo: bool = False):
+                 ooo: bool = False, coalesce: str = "manual",
+                 coalesce_policy: CoalescePolicy | None = None):
+        if coalesce not in ("manual", "auto"):
+            raise ValueError(f"unknown coalesce mode {coalesce!r}")
         self.sim = Sim(n_servers, cores_per_server, cost,
                        qps_per_thread=qps_per_thread, ooo=ooo)
         self.heap = GlobalHeap(n_servers, partition_bytes)
         self.backend_name = backend
         self.backend_drust = backend == "drust"
         self.batch_io = batch_io
+        self.channels: list = []               # auto mode: quantum-settled
         if backend == "drust":
             self.drust = DrustRuntime(self.sim, self.heap, batch_io=batch_io)
             self.backend = DrustBackend(self.drust)
@@ -259,6 +443,12 @@ class Cluster:
             self.backend = GrappaBackend(self.sim, self.heap, batch_io=batch_io)
         else:
             raise ValueError(f"unknown backend {backend!r}")
+        # The deref coalescer needs the batched plane (it flushes through
+        # read_many doorbells) and ownership-derived borrows (drust only);
+        # channel send staging applies under "auto" for every backend.
+        self.coalesce = coalesce
+        if coalesce == "auto" and self.backend_drust and batch_io:
+            self.drust.coalescer = DerefCoalescer(self.drust, coalesce_policy)
         self.scheduler = Scheduler(self)
         self.controller = GlobalController(self)
         self.replicator = None
@@ -272,7 +462,17 @@ class Cluster:
         self.scheduler.threads.append(th)
         return th
 
+    def close_quanta(self) -> None:
+        """End-of-quantum settle (runtime policy, not app code): flush
+        staged channel sends and every pending coalesced deref.  Idempotent
+        — a no-op under ``coalesce="manual"`` or when nothing is pending."""
+        for ch in self.channels:
+            ch.flush_sends()
+        if self.backend_drust and self.drust.coalescer is not None:
+            self.drust.coalescer.flush_all()
+
     def makespan_us(self) -> float:
+        self.close_quanta()
         return self.sim.makespan_us(self.scheduler.threads)
 
     def throughput(self, n_ops: int) -> float:

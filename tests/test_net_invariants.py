@@ -285,11 +285,14 @@ APP_KW = {
 
 @pytest.mark.parametrize("key", sorted(GOLDEN))
 def test_degenerate_plane_reproduces_pr1(key):
+    # coalesce="manual" pins the PR-1 choreography the goldens were
+    # captured from; the runtime coalescer (coalesce="auto") is covered by
+    # the equivalence tests in test_apps.py.
     from repro.apps.dataframe import run_dataframe
     from repro.apps.socialnet import run_socialnet
     app, backend, mode = key.split("/")
     fn = run_socialnet if app == "socialnet" else run_dataframe
-    r = fn(4, backend, batch_io=(mode == "batched"),
+    r = fn(4, backend, batch_io=(mode == "batched"), coalesce="manual",
            qps_per_thread=1, ooo=False, **APP_KW[app])
     g = GOLDEN[key]
     assert r.makespan_us == pytest.approx(g["makespan_us"], rel=1e-9), \

@@ -1,0 +1,371 @@
+"""Staleness-safety property suite for speculative prefetch + the deref
+coalescer.
+
+Random schedules interleave speculative prefetch, reads (materialization),
+owner writes, ownership transfer, and drop over a small box population;
+after every operation the invariants below must hold:
+
+  * Staleness-Safety: a deref NEVER observes pre-transfer / pre-write
+    bytes — every read returns the payload version current at
+    materialization time.  (The oracle versions every write; a speculative
+    copy fetched before a mutation must be invalidated, never served.)
+  * Exactly-Once Disposition: every speculative completion id is *fenced*
+    (materialized at first use, counted in ``late_fences``) or
+    *invalidated* (killed before use, counted in ``wasted_prefetches``)
+    exactly once — ``DrustRuntime.spec_log`` is checked against the posted
+    cid ledger after the schedule drains.
+  * Counter Consistency: ``speculative_fetches`` equals the posted cids,
+    and the fenced/invalidated split equals the disposition log.
+  * Materialized entries are no longer speculative, and the completion
+    plane fully drains at the end (no leaked pending verbs).
+
+Each property runs twice: hypothesis-generated (200 schedules, derandomized
+under the CI profile — see ``_hypcompat``) and a seeded deterministic twin
+that executes on machines without hypothesis.
+
+The suite also pins the coalescer's conflict discipline: a mutable op on a
+box with registered (unflushed) derefs closes those quanta instead of
+raising ``BorrowError``, and a registered deref returns exactly the bytes
+the flush later materializes (the borrow freezes the payload).
+"""
+
+from __future__ import annotations
+
+import random
+
+from _hypcompat import given, settings, st
+
+from repro.core import BorrowError, Cluster, CoalescePolicy
+
+N_SERVERS = 4
+N_THREADS = 4
+N_BOXES = 3
+
+KINDS = ["prefetch", "prefetch", "read", "read", "owner_read", "write",
+         "transfer", "drop"]
+
+
+def make(qps: int = 1, ooo: bool = False):
+    cl = Cluster(N_SERVERS, backend="drust", qps_per_thread=qps, ooo=ooo)
+    ths = []
+    for i in range(N_THREADS):
+        th = cl.main_thread(0)
+        th.server = i % N_SERVERS
+        ths.append(th)
+    return cl, ths
+
+
+def run_spec_schedule(ops, qps: int = 1, ooo: bool = False,
+                      tied: bool = False) -> None:
+    """Execute a prefetch/transfer/drop schedule, checking the staleness
+    and disposition invariants after every op.  With ``tied=True`` box 1
+    is a TBox child of box 0, so group prefetches cover two owners and a
+    drop of the parent cascades."""
+    cl, ths = make(qps, ooo)
+    rt = cl.drust
+    version = [0] * N_BOXES
+    boxes = [cl.backend.alloc(ths[0], 256, ("v", 0, 0))]
+    boxes.append(cl.backend.alloc(ths[1 % N_THREADS], 256, ("v", 1, 0),
+                                  tie_to=boxes[0] if tied else None))
+    boxes += [cl.backend.alloc(ths[i % N_THREADS], 256, ("v", i, 0))
+              for i in range(2, N_BOXES)]
+    for kind, t, o, p in ops:
+        th, i = ths[t % N_THREADS], o % N_BOXES
+        box = boxes[i]
+        if box.dropped:                          # incl. cascaded TBox drops
+            continue
+        if kind == "prefetch":
+            rt.prefetch(th, [box])
+        elif kind == "read":
+            val = cl.backend.read(th, box)
+            assert val == ("v", i, version[i]), \
+                f"stale deref: saw {val}, current is version {version[i]}"
+            e = rt.caches[th.server].entries.get(box.g)
+            if e is not None:
+                assert not e.speculative, "materialized entry still marked"
+        elif kind == "owner_read":
+            val = rt.owner_read(th, box)
+            assert val == ("v", i, version[i]), \
+                f"stale owner read: saw {val}, current {version[i]}"
+        elif kind == "write":
+            version[i] += 1
+            cl.backend.write(th, box, ("v", i, version[i]))
+        elif kind == "transfer":
+            rt.transfer(th, box, p % N_SERVERS)
+        elif kind == "drop":
+            rt.drop_box(th, box)
+        for how in rt.spec_log.values():
+            assert how in ("fenced", "invalidated")
+    for i in range(N_BOXES):
+        if not boxes[i].dropped:
+            rt.drop_box(ths[0], boxes[i])
+    # Exactly-once disposition over the whole schedule.
+    assert len(rt.spec_cids) == len(set(rt.spec_cids))
+    assert set(rt.spec_cids) == set(rt.spec_log), \
+        "a speculative cid was neither fenced nor invalidated"
+    net = cl.sim.net
+    fenced = sum(1 for v in rt.spec_log.values() if v == "fenced")
+    wasted = sum(1 for v in rt.spec_log.values() if v == "invalidated")
+    assert net.late_fences == fenced
+    assert net.wasted_prefetches == wasted
+    assert net.speculative_fetches == len(rt.spec_cids)
+    cl.sim.wb.fence_all(ths[0])
+    assert not cl.sim.wb._pending, "completion plane leaked pending verbs"
+
+
+spec_ops = st.lists(
+    st.tuples(st.sampled_from(KINDS),
+              st.integers(0, N_THREADS - 1),
+              st.integers(0, N_BOXES - 1),
+              st.integers(0, N_SERVERS - 1)),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=200, deadline=None)
+@given(spec_ops, st.sampled_from([1, 2, 4]), st.booleans(), st.booleans())
+def test_prefetch_staleness_safety_property(ops, qps, ooo, tied):
+    run_spec_schedule(ops, qps, ooo, tied)
+
+
+def test_prefetch_staleness_safety_200_seeded_schedules():
+    """Deterministic twin of the hypothesis suite: 200 seeded random
+    schedules (half with a TBox-tied pair), so the property is exercised
+    even without hypothesis."""
+    rng = random.Random(3)
+    for _ in range(200):
+        qps = rng.choice([1, 2, 4])
+        ooo = rng.random() < 0.5
+        tied = rng.random() < 0.5
+        ops = [(rng.choice(KINDS), rng.randrange(N_THREADS),
+                rng.randrange(N_BOXES), rng.randrange(N_SERVERS))
+               for _ in range(rng.randint(1, 40))]
+        run_spec_schedule(ops, qps, ooo, tied)
+
+
+# --------------------------------------------------------------------------
+#  Directed prefetch mechanics
+# --------------------------------------------------------------------------
+def test_prefetch_fences_lazily_at_first_use():
+    cl, ths = make()
+    t1 = ths[1]
+    box = cl.backend.alloc(ths[0], 512, b"x" * 512)
+    assert cl.drust.prefetch(t1, [box]) == 1
+    net = cl.sim.net
+    assert net.speculative_fetches == 1
+    assert net.late_fences == 0                  # not fenced at post time
+    assert box.fetch_cid in cl.sim.wb._pending   # verb in flight
+    assert cl.backend.read(t1, box) == b"x" * 512
+    assert net.late_fences == 1                  # fence deferred to use
+    assert net.wasted_prefetches == 0
+    assert box.fetch_cid == 0
+    cl.backend.read(t1, box)                     # warm: no second fence
+    assert net.late_fences == 1
+
+
+def test_prefetch_skips_local_cached_and_inflight():
+    cl, ths = make()
+    t1 = ths[1]
+    local = cl.backend.alloc(t1, 64, 1, server=t1.server)
+    warm = cl.backend.alloc(ths[0], 64, 2)
+    cl.backend.read(t1, warm)                    # now cached on t1's server
+    cold = cl.backend.alloc(ths[0], 64, 3)
+    assert cl.drust.prefetch(t1, [local, warm, cold]) == 1
+    assert cl.drust.prefetch(t1, [cold]) == 0    # already in flight
+    cl.backend.read(t1, cold)
+
+
+def test_transfer_invalidates_unused_prefetch_and_fences_cid():
+    cl, ths = make()
+    t1 = ths[1]
+    box = cl.backend.alloc(ths[0], 512, b"y" * 512)
+    cl.drust.prefetch(t1, [box])
+    cid = box.fetch_cid
+    done = cl.sim.wb._pending[cid].done_us
+    cl.drust.transfer(ths[0], box, 2)
+    assert cid not in cl.sim.wb._pending         # fenced like a write-back
+    assert ths[0].t_us >= done - 1e-9            # transfer waited for the READ
+    assert cl.sim.net.wasted_prefetches == 1
+    assert cl.drust.spec_log[cid] == "invalidated"
+    assert box.g not in cl.drust.caches[t1.server].entries
+
+
+def test_owner_mutation_wastes_unused_prefetch():
+    cl, ths = make()
+    t1 = ths[1]
+    box = cl.backend.alloc(ths[0], 512, ("v", 0))
+    cl.drust.prefetch(t1, [box])
+    cl.backend.write(ths[0], box, ("v", 1))      # mutate before first use
+    assert cl.sim.net.wasted_prefetches == 1
+    assert cl.backend.read(t1, box) == ("v", 1)  # fresh fetch, not the stale copy
+    assert cl.sim.net.late_fences == 0
+
+
+def test_tbox_group_prefetch_one_doorbell():
+    """A TBox chain prefetches as ONE doorbell (n_verbs = group size); any
+    member's first use runs the single deferred fence for the whole cid."""
+    cl, ths = make()
+    t1 = ths[1]
+    head = cl.backend.alloc(ths[0], 128, b"h")
+    mid = cl.backend.alloc(ths[0], 128, b"m", tie_to=head)
+    tail = cl.backend.alloc(ths[0], 128, b"t", tie_to=mid)
+    assert cl.drust.prefetch(t1, [head]) == 1
+    net = cl.sim.net
+    assert net.speculative_fetches == 1          # one doorbell for the group
+    assert cl.backend.read(t1, mid) == b"m"      # child use fences the cid
+    assert net.late_fences == 1
+    assert cl.backend.read(t1, head) == b"h"     # sibling: no second fence
+    assert net.late_fences == 1
+    assert net.wasted_prefetches == 0
+
+
+def test_tied_child_mutation_wastes_whole_group_prefetch():
+    """Regression: a group prefetch records its cid on EVERY fetched
+    member — mutating a tied child (even with U set, i.e. no color bump)
+    before first use must kill the whole doorbell's entries, or a remote
+    reader would observe the pre-write child bytes."""
+    cl, ths = make()
+    t1 = ths[1]
+    parent = cl.backend.alloc(ths[0], 128, b"p")
+    child = cl.backend.alloc(ths[0], 128, b"v1", tie_to=parent)
+    cl.backend.write(ths[0], child, b"v1")       # sets child's U bit
+    cl.drust.prefetch(t1, [parent])              # snapshots p + v1
+    assert child.fetch_cid == parent.fetch_cid != 0
+    cl.backend.write(ths[0], child, b"v2")       # U set: no color bump
+    assert cl.sim.net.wasted_prefetches == 1
+    assert cl.backend.read(t1, child) == b"v2", "stale tied-child bytes"
+
+
+def test_sibling_materialization_waits_for_read_completion():
+    """Regression: the deferred fence is once-per-cid for *counting*, but
+    every thread materializing an entry of the doorbell must still wait
+    for the READ's completion time (retired cids keep theirs)."""
+    cl, ths = make()
+    t1, t2 = ths[1], ths[2]
+    t2.server = t1.server                        # share the prefetched cache
+    head = cl.backend.alloc(ths[0], 4096, b"h" * 4096)
+    tail = cl.backend.alloc(ths[0], 4096, b"t" * 4096, tie_to=head)
+    cl.drust.prefetch(t1, [head])
+    done = cl.sim.wb._pending[head.fetch_cid].done_us
+    cl.backend.read(t1, tail)                    # first use: fences the cid
+    assert t1.t_us >= done - 1e-9
+    assert t2.t_us < done                        # t2 hasn't waited yet
+    cl.backend.read(t2, head)                    # sibling entry, same cid
+    assert t2.t_us >= done - 1e-9, \
+        "sibling materialization consumed bytes before the READ completed"
+    assert cl.sim.net.late_fences == 1           # counter stays once-per-cid
+
+
+def test_eviction_does_not_permanently_disable_prefetch():
+    """Regression: a speculative entry dying through eviction (refcount 0)
+    records its disposition via ``on_spec_drop``, which cannot reach the
+    box handle — the stale ``fetch_cid`` must clear lazily so the box can
+    be prefetched again."""
+    cl, ths = make()
+    t1 = ths[1]
+    box = cl.backend.alloc(ths[0], 512, b"e" * 512)
+    cl.drust.prefetch(t1, [box])
+    cid = box.fetch_cid
+    cl.drust.evict_caches(t1.server)             # memory pressure sweep
+    assert cl.drust.spec_log[cid] == "invalidated"
+    assert cl.sim.net.wasted_prefetches == 1
+    assert cl.drust.prefetch(t1, [box]) == 1, "dead cid blocked re-prefetch"
+    assert cl.backend.read(t1, box) == b"e" * 512
+
+
+def test_registered_deref_returns_snapshot_not_alias():
+    """Regression: the coalescer's registered deref must hand back a
+    snapshot (the manual plane's clone semantics), never an alias of the
+    owner's live heap object."""
+    cl = Cluster(N_SERVERS, backend="drust", coalesce="auto")
+    t0 = cl.main_thread(0)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    box = cl.backend.alloc(t0, 256, [1, 2, 3])
+    val = cl.backend.read(t1, box)               # registered (pending)
+    import repro.core.addr as A
+    assert val == [1, 2, 3]
+    assert val is not cl.drust.heap.get(A.clear_color(box.g)).data
+    val.append(99)                               # reader-side mutation
+    cl.drust.coalescer.flush(t1)
+    assert cl.backend.read(t1, box) == [1, 2, 3], \
+        "reader mutation leaked into the owner's heap object"
+
+
+def test_drop_box_fences_inflight_prefetch_before_free():
+    cl, ths = make()
+    t1 = ths[1]
+    box = cl.backend.alloc(ths[0], 512, b"z" * 512)
+    cl.drust.prefetch(t1, [box])
+    cid = box.fetch_cid
+    cl.drust.drop_box(ths[0], box)               # B.4: fence before free
+    assert cid not in cl.sim.wb._pending
+    assert cl.drust.spec_log[cid] == "invalidated"
+    assert cl.sim.net.wasted_prefetches == 1
+
+
+# --------------------------------------------------------------------------
+#  Coalescer conflict discipline
+# --------------------------------------------------------------------------
+def test_registered_deref_flushes_on_write_conflict():
+    """A mutable op on a box with registered derefs closes the quantum
+    instead of tripping the borrow checker; the registered value equals
+    what the flush materializes (the borrow froze the payload)."""
+    cl = Cluster(N_SERVERS, backend="drust", coalesce="auto")
+    t0 = cl.main_thread(0)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    box = cl.backend.alloc(t0, 256, ("v", 0))
+    other = cl.backend.alloc(t0, 256, ("o", 0))
+    co = cl.drust.coalescer
+    val = cl.backend.read(t1, box)               # registers, returns frozen bytes
+    cl.backend.read(t1, other)
+    assert val == ("v", 0)
+    assert co.pending and box.live_refs == 1
+    cl.backend.write(t0, box, ("v", 1))          # conflict -> quantum closes
+    assert not co.pending and box.live_refs == 0
+    assert co.flushes == 1 and co.flushed_derefs == 2
+    assert cl.backend.read(t1, box) == ("v", 1)  # post-write deref: fresh
+
+
+def test_registered_deref_flushes_on_transfer_and_drop():
+    cl = Cluster(N_SERVERS, backend="drust", coalesce="auto")
+    t0 = cl.main_thread(0)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    a = cl.backend.alloc(t0, 128, 1)
+    b = cl.backend.alloc(t0, 128, 2)
+    cl.backend.read(t1, a)
+    cl.drust.transfer(t0, a, 2)                  # flushes t1's quantum
+    assert a.live_refs == 0
+    cl.backend.read(t1, b)
+    cl.drust.drop_box(t0, b)                     # flushes, then drops
+    assert b.dropped
+
+
+def test_static_budget_closes_quantum():
+    cl = Cluster(N_SERVERS, backend="drust", coalesce="auto",
+                 coalesce_policy=CoalescePolicy(max_pending=4))
+    t0 = cl.main_thread(0)
+    t1 = cl.main_thread(0)
+    t1.server = 3
+    boxes = [cl.backend.alloc(t0, 128, i, server=i % 3) for i in range(10)]
+    rt0 = cl.sim.net.round_trips                 # setup allocs paid RPCs
+    for b in boxes[:3]:
+        cl.backend.read(t1, b)
+    assert cl.sim.net.round_trips == rt0         # still pending
+    cl.backend.read(t1, boxes[3])                # 4th deref hits the budget
+    assert cl.sim.net.round_trips == rt0 + 3     # one doorbell per source
+    assert cl.drust.coalescer.flushes == 1
+
+
+def test_manual_mode_keeps_borrow_errors():
+    """Without the coalescer the borrow checker still fires — the conflict
+    flush must not mask genuine violations."""
+    import pytest
+    cl = Cluster(2, backend="drust")             # coalesce="manual"
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t0, 64, 0)
+    r = box.borrow(t0)
+    with pytest.raises(BorrowError):
+        box.borrow_mut(t0)
+    r.drop(t0)
