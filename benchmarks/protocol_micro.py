@@ -231,15 +231,22 @@ def qp_sweep_summary(qp_counts=(1, 2, 4), depths=(8, 56)) -> dict:
 
 COALESCE_MIXES = ("small", "bulk", "mixed")
 COALESCE_BUDGETS = (1, 4, 16, 64)
+EXPOSE_SLO_US = 2.0        # latency-exposure SLO column: flush at 2us pending
+EXPOSE_THINK_CYCLES = 1300  # ~0.5us of per-request work between derefs
 
 
 def _coalesce_run(mix: str, budget, n_objects: int = 96, n_servers: int = 8,
-                  qps: int = 4):
+                  qps: int = 4, think_cycles: int = 0):
     """One coalescer trace: a reader on the last server issues plain
     per-object derefs of ``n_objects`` spread over the other servers; the
     runtime registers and flushes them under the given quantum budget
-    (``"auto"`` = the adaptive policy).  Returns (cluster, reader)."""
+    (``"auto"`` = the adaptive policy, ``"expose"`` = adaptive + the
+    ``max_expose_us`` latency-SLO cap).  ``think_cycles`` inserts compute
+    between derefs — the exposure SLO only has something to bound when
+    virtual time passes inside the quantum.  Returns (cluster, reader)."""
     policy = (CoalescePolicy() if budget == "auto"
+              else CoalescePolicy(max_expose_us=EXPOSE_SLO_US)
+              if budget == "expose"
               else CoalescePolicy(max_pending=budget))
     cl = Cluster(n_servers, backend="drust", ooo=True, qps_per_thread=qps,
                  coalesce="auto", coalesce_policy=policy)
@@ -256,18 +263,25 @@ def _coalesce_run(mix: str, budget, n_objects: int = 96, n_servers: int = 8,
     t0.t_us = 0.0
     for b in boxes:
         cl.backend.read(t0, b)
+        if think_cycles:
+            cl.sim.compute(t0, think_cycles)
     return cl, t0
 
 
 def coalesce_budget_sweep():
     """Makespan vs static quantum budget per request mix, plus the adaptive
-    policy: the ``derived`` column is the round-trip count (doorbells), the
-    headline is that ``auto`` lands at the best static budget's makespan on
-    every mix — big quanta for small objects, knee-bounded for bulk."""
+    policy and the adaptive+latency-SLO column (``expose``: the coalescer
+    force-flushes once the oldest registered deref has been pending longer
+    than ``EXPOSE_SLO_US``): the ``derived`` column is the round-trip count
+    (doorbells), the headline is that ``auto`` lands at the best static
+    budget's makespan on every mix — big quanta for small objects,
+    knee-bounded for bulk — while ``expose`` trades some of that makespan
+    for a bounded deref-latency exposure."""
     rows = []
     for mix in COALESCE_MIXES:
-        for budget in COALESCE_BUDGETS + ("auto",):
-            cl, _ = _coalesce_run(mix, budget)
+        for budget in COALESCE_BUDGETS + ("auto", "expose"):
+            think = EXPOSE_THINK_CYCLES if budget == "expose" else 0
+            cl, _ = _coalesce_run(mix, budget, think_cycles=think)
             rows.append((f"coalesce_{mix}_budget{budget}",
                          cl.makespan_us(), cl.sim.net.round_trips))
     return rows

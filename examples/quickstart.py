@@ -20,15 +20,19 @@ def main():
     val = cl.backend.alloc(main_th, 8, 5)          # Box::new(5)
     b = cl.backend.alloc(main_th, 8, 10)           # Box::new(10)
 
-    # local add: a.val += *b  (immutable borrow of b, mutable of val)
-    delta = cl.backend.read(main_th, b)
-    cl.backend.update(main_th, val, lambda v: v + delta)
-    print(f"local add  -> a.val == {cl.backend.read(main_th, val)}")
+    # local add: a.val += *b — the guard scopes ARE the borrow lifetimes
+    # (read guard = immutable borrow of b, write guard = mutable of val)
+    with b.read(main_th) as delta:
+        with val.write(main_th) as w:
+            w.update(lambda v: v + delta)
+    with val.read(main_th) as v:
+        print(f"local add  -> a.val == {v}")
 
     # spawn on another server: only the *pointers* ship (16 bytes)
     worker = cl.scheduler.spawn_to(b, lambda th: None, parent=main_th)
-    delta = cl.backend.read(worker, b)             # local on its home
-    cl.backend.update(worker, val, lambda v: v + delta)  # moves val to worker
+    with b.read(worker) as delta:                  # local on its home
+        with val.write(worker) as w:               # moves val to worker
+            w.update(lambda v: v + delta)
     print(f"remote add -> a.val == {cl.backend.read(main_th, val)} "
           f"(object now lives on server {A.server_of(val.g)})")
     print(f"network: {cl.sim.net.one_sided_reads} one-sided reads, "

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import addr as A
+from repro.core import addr as A, backend_caps
 from .common import AppResult, make_cluster, spread_threads
 
 CYCLES_PER_BYTE = 110.13
@@ -50,9 +50,10 @@ def run_dataframe(n_servers: int, backend: str = "drust",
                   use_spawn_to: bool = False, batch_io: bool = True,
                   coalesce: str = "auto", qps_per_thread: int = 1,
                   ooo: bool = False, cost=None, seed: int = 0) -> AppResult:
-    use_tbox = use_tbox and backend == "drust"
-    use_spawn_to = use_spawn_to and backend == "drust"
-    auto = coalesce == "auto" and backend == "drust" and batch_io
+    caps = backend_caps(backend)
+    use_tbox = use_tbox and caps.supports_affinity
+    use_spawn_to = use_spawn_to and caps.supports_affinity
+    auto = coalesce == "auto" and caps.supports_coalescing and batch_io
     cl = make_cluster(n_servers, backend, cores, batch_io=batch_io,
                       qps_per_thread=qps_per_thread, ooo=ooo, cost=cost,
                       coalesce="auto" if auto else "manual")
@@ -102,7 +103,8 @@ def run_dataframe(n_servers: int, backend: str = "drust",
             # builder and worker pools rotate independently (co-prime offsets)
             th = ths[w % len(ths)]
             srcs = [(k + d) % chunks_per_column for d in range(2)]
-            cl.backend.write(th, entry, srcs)
+            with entry.write(th) as slot:             # builder owns its shard
+                slot.set(srcs)
             ops += 1
             if use_spawn_to:
                 data_srv = A.server_of(col[k].g)
@@ -117,15 +119,19 @@ def run_dataframe(n_servers: int, backend: str = "drust",
             if choreograph:                               # batched probing
                 srcs = cl.backend.read_many(th, probe_handles)[-1]
             else:
-                # plain hash-table probing: per-entry derefs (registered
-                # and coalesced by the runtime under coalesce="auto")
+                # plain hash-table probing: per-entry scoped derefs
+                # (registered and coalesced by the runtime under
+                # coalesce="auto")
                 for h in probe_handles[:-1]:
-                    cl.backend.read(th, h)
-                srcs = cl.backend.read(th, index[k])
+                    with h.read(th):
+                        pass
+                with index[k].read(th) as v:
+                    srcs = v
             if use_tbox:
                 # iterating the column dereferences the head TBox chain:
                 # the whole group lands in the local cache in one READ
-                cl.backend.read(th, col[0])
+                with col[0].read(th):
+                    pass
             acc = 0.0
             if choreograph:
                 scan = cl.backend.read_many(th, [col[s] for s in srcs])
@@ -137,14 +143,15 @@ def run_dataframe(n_servers: int, backend: str = "drust",
                     cl.sim.compute(th, chunk_cycles * 0.25)
             else:
                 for s_idx in srcs:
-                    chunk = cl.backend.read(th, col[s_idx])   # scan pass
-                    acc += float(np.sum(chunk))
-                    cl.sim.compute(th, chunk_cycles)
-                    chunk = cl.backend.read(th, col[s_idx])   # materialize
-                    cl.sim.compute(th, chunk_cycles * 0.25)
+                    with col[s_idx].read(th) as chunk:    # scan pass
+                        acc += float(np.sum(chunk))
+                        cl.sim.compute(th, chunk_cycles)
+                    with col[s_idx].read(th):             # materialize
+                        cl.sim.compute(th, chunk_cycles * 0.25)
             digest += acc
             out = cl.backend.alloc(th, chunk_bytes, acc)
-            cl.backend.write(th, out, acc)
+            with out.write(th) as slot:
+                slot.set(acc)
             ops += 1
 
     span = cl.makespan_us()                        # settles pending quanta

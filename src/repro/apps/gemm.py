@@ -62,20 +62,23 @@ def run_gemm(n_servers: int, backend: str = "drust", n: int = 1024,
     ops = 0
     for w, th in enumerate(ths):
         for (i, j) in tiles[w * per_worker:(w + 1) * per_worker]:
-            if prefetch:
-                # speculative fetch of the whole A-row / B-column working
-                # set; already-cached tiles (row/column reuse) are skipped
-                cl.backend.prefetch(th, [a_h[(i, k)] for k in range(nt)]
-                                    + [b_h[(k, j)] for k in range(nt)])
-            acc = np.zeros((tile, tile), dtype=np.float32)
-            for k in range(nt):
-                at = cl.backend.read(th, a_h[(i, k)])
-                bt = cl.backend.read(th, b_h[(k, j)])
-                acc += at @ bt
-                cl.sim.compute(th, flops_per_mac / FLOPS_PER_CYCLE)
-                ops += 1
-            c_handle = cl.backend.alloc(th, tile_bytes, acc)
-            cl.backend.write(th, c_handle, acc)
+            # One region per output tile: the k-loop's working set is the
+            # region's scope, and the speculative fetch of the whole A-row
+            # / B-column set is an entry hint (already-cached tiles from
+            # row/column reuse are skipped by the backend).
+            hint = ([a_h[(i, k)] for k in range(nt)]
+                    + [b_h[(k, j)] for k in range(nt)]) if prefetch else ()
+            with cl.region(th, prefetch=hint):
+                acc = np.zeros((tile, tile), dtype=np.float32)
+                for k in range(nt):
+                    with a_h[(i, k)].read(th) as at, \
+                            b_h[(k, j)].read(th) as bt:
+                        acc += at @ bt
+                    cl.sim.compute(th, flops_per_mac / FLOPS_PER_CYCLE)
+                    ops += 1
+                c_handle = cl.backend.alloc(th, tile_bytes, acc)
+                with c_handle.write(th) as wr:
+                    wr.set(acc)
             out[i*tile:(i+1)*tile, j*tile:(j+1)*tile] = acc
 
     if check:

@@ -66,30 +66,33 @@ def run_kvstore(n_servers: int, backend: str = "drust",
         b, j = divmod(key, nodes_per_bucket)
         mtx, nodes = buckets[b]
 
+        ahead = []
         if prefetch_window:
             # Lookahead: this worker's next queued keys — fetches overlap
             # the lock walk; a SET racing the window wastes its prefetch.
-            ahead = []
             for i2 in range(i + len(ths), i + len(ths) * (prefetch_window + 1),
                             len(ths)):
                 if i2 >= n_ops:
                     break
                 b2, j2 = divmod(int(keys[i2]), nodes_per_bucket)
                 ahead.append(buckets[b2][1][j2])
-            cl.backend.prefetch(th, ahead)
 
-        # Lock guards the chain walk only (hash + j pointer hops).
-        def chain_walk(_obj, th=th, j=j):
-            for _ in range(j + 1):
-                cl.sim.local_access(th)
-            return None
-        mtx.with_lock(th, chain_walk)
+        # One region per request: the lookahead is an entry hint, the lock
+        # walk + value access are the scope.
+        with cl.region(th, prefetch=ahead):
+            # Lock guards the chain walk only (hash + j pointer hops).
+            def chain_walk(_obj, th=th, j=j):
+                for _ in range(j + 1):
+                    cl.sim.local_access(th)
+                return None
+            mtx.with_lock(th, chain_walk)
 
-        # Value access outside the lock (SWMR per key).
-        val = cl.backend.read(th, nodes[j])
-        cl.sim.compute(th, value_cycles)
-        if not is_get[i]:
-            cl.backend.write(th, nodes[j], bytes(value_bytes))
+            # Value access outside the lock (SWMR per key).
+            with nodes[j].read(th):
+                cl.sim.compute(th, value_cycles)
+            if not is_get[i]:
+                with nodes[j].write(th) as w:
+                    w.set(bytes(value_bytes))
 
     return AppResult("kvstore", backend, n_servers, n_ops, cl.makespan_us(),
                      net=cl.sim.snapshot()["net"],

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Channel
+from repro.core import Channel, backend_caps
 from .common import AppResult, make_cluster, spread_threads
 
 TEXT_BYTES = 1024
@@ -58,8 +58,8 @@ def run_socialnet(n_servers: int, backend: str = "drust",
                   ooo: bool = False, cost=None, seed: int = 0) -> AppResult:
     # The runtime deref coalescer needs ownership borrows + the batched
     # plane; every other configuration runs the manual choreography.
-    auto = (coalesce == "auto" and backend == "drust" and batch_io
-            and not by_value)
+    auto = (coalesce == "auto" and backend_caps(backend).supports_coalescing
+            and batch_io and not by_value)
     cl = make_cluster(n_servers, backend, cores, batch_io=batch_io,
                       qps_per_thread=qps_per_thread, ooo=ooo, cost=cost,
                       coalesce="auto" if auto else "manual")
@@ -150,8 +150,8 @@ def run_socialnet(n_servers: int, backend: str = "drust",
             proc = STORE_PROC_CYCLES if s == n_stages - 1 else POST_PROC_CYCLES
             cl.sim.compute(dst, proc)
             if not by_value:
-                data = cl.backend.read(dst, handle)   # fetch on dereference
-                digest += len(data)
+                with handle.read(dst) as data:        # fetch on dereference
+                    digest += len(data)               # (scoped borrow)
             inflight[i] = handle
 
     span = cl.makespan_us()                        # settles pending quanta

@@ -3,6 +3,9 @@ JAX-facing ownership state store (``jaxstate``).
 
 Entry points:
   * ``Cluster(n, backend=...)`` — simulated deployment (drust | gam | grappa)
+  * ``ProtocolBackend`` — the backend-generic verb ABC all three implement
+  * scoped guards — ``with box.read(th) as v:`` / ``with box.write(th) as
+    w:`` / ``with cluster.region(th) as r:`` (see ``protocol``)
   * ``DrustRuntime`` — the coherence protocol engine (Algorithms 1-8)
   * ``OwnedState`` — colored, borrow-checked distributed pytrees for JAX
 """
@@ -18,17 +21,21 @@ from .jaxstate import (ColoredAddr, OwnedState, ReplicaSlot, StateCache,
 from .net import CostModel, IOBatch, NetStats, Sim, WritebackQueue
 from .ownership import (BorrowError, DBox, DrustBackend, DrustRuntime, MutRef,
                         Ref, StackRef)
+from .protocol import (ProtocolBackend, ReadGuard, Region, WriteGuard,
+                       backend_caps, backend_class)
 from .runtime import (Cluster, CoalescePolicy, DerefCoalescer,
                       GlobalController, Scheduler, Thread)
 from .sync import DAtomic, DMutex
 
 __all__ = [
-    "addr", "BorrowError", "Channel", "Cluster", "CoalescePolicy",
-    "ColoredAddr", "CostModel",
+    "addr", "backend_caps", "backend_class", "BorrowError", "Channel",
+    "Cluster", "CoalescePolicy", "ColoredAddr", "CostModel",
     "DAtomic", "DBox", "DerefCoalescer", "DMutex", "DrustBackend",
     "DrustRuntime", "GamBackend",
     "GHandle", "GlobalController", "GlobalHeap", "GrappaBackend", "IOBatch",
     "LocalCache", "MutRef", "NetStats", "Obj", "OwnedState", "Partition",
-    "Ref", "ReplicaSlot", "Replicator", "Scheduler", "Sim", "StackRef",
+    "ProtocolBackend", "ReadGuard", "Ref", "Region", "ReplicaSlot",
+    "Replicator", "Scheduler", "Sim", "StackRef",
     "StateCache", "StateMutRef", "StateRef", "Thread", "WritebackQueue",
+    "WriteGuard",
 ]

@@ -14,8 +14,13 @@
   trip and hot objects saturate their home server (the paper's KV-store skew
   collapse).
 
-Both expose the same whole-object ``alloc/read/write/update/free`` facade as
-``DrustBackend`` so the four applications run unmodified on all three.
+Both implement the same ``ProtocolBackend`` ABC as ``DrustRuntime``
+(verbs: alloc / read / write / update / transfer / drop / read_many /
+prefetch), and their handles carry the same scoped-guard surface
+(``with h.read(th) as v:`` / ``with h.write(th) as w:``), so the four
+applications run unmodified on all three.  Borrow misuse raises
+``BorrowError`` here too — tracked by the guard layer, since neither
+protocol has ownership state of its own.
 """
 
 from __future__ import annotations
@@ -27,6 +32,8 @@ from . import addr as A
 from .heap import GlobalHeap
 from .net import Sim
 from .ownership import _clone
+from .protocol import (ProtocolBackend, ReadGuard, WriteGuard,
+                       register_backend)
 
 BLOCK = 512                      # GAM default cache block size (bytes)
 
@@ -36,10 +43,20 @@ class GHandle:
     """A plain global pointer: raw address + object size."""
     raw: int
     size: int
+    backend: Any = field(default=None, repr=False, compare=False)
+    live_refs: int = field(default=0, repr=False, compare=False)
+    live_mut: bool = field(default=False, repr=False, compare=False)
 
     @property
     def home(self) -> int:
         return A.server_of(self.raw)
+
+    # Scoped-guard surface (same shape as DBox.read/DBox.write).
+    def read(self, th) -> ReadGuard:
+        return ReadGuard(self.backend, th, self)
+
+    def write(self, th) -> WriteGuard:
+        return WriteGuard(self.backend, th, self)
 
 
 # --------------------------------------------------------------------------
@@ -52,7 +69,8 @@ class DirEntry:
     owner: int | None = None               # server holding M
 
 
-class GamBackend:
+@register_backend
+class GamBackend(ProtocolBackend):
     name = "gam"
     # Calibration: cold clean read = base + transfer ~= 16us @ 512B (paper §3).
     COLD_READ_BASE_US = 12.4
@@ -77,7 +95,7 @@ class GamBackend:
             self.sim.rpc(th, server, req_bytes=64 + size)
         raw = self.heap.alloc_on(server, size, data)
         self.directory[raw] = DirEntry(state="S", sharers=set())
-        return GHandle(raw, size)
+        return GHandle(raw, size, backend=self)
 
     def _nblocks(self, h: GHandle) -> int:
         return max(1, -(-h.size // BLOCK))
@@ -208,12 +226,10 @@ class GamBackend:
         safe — prefetch is a no-op (apps run unmodified)."""
         return 0
 
-    def update(self, th, h: GHandle, fn: Callable[[Any], Any]) -> Any:
-        val = fn(self.read(th, h))
-        self.write(th, h, val)
-        return val
+    # ``update`` inherits the ABC default: one write guard = read (charged
+    # as a directory read) + write — exactly the legacy fn(read)+write pair.
 
-    def free(self, th, h: GHandle) -> None:
+    def drop(self, th, h: GHandle) -> None:
         self.directory.pop(h.raw, None)
         for c in self.caches:
             c.pop(h.raw, None)
@@ -223,7 +239,8 @@ class GamBackend:
 # --------------------------------------------------------------------------
 #  Grappa-style delegation protocol
 # --------------------------------------------------------------------------
-class GrappaBackend:
+@register_backend
+class GrappaBackend(ProtocolBackend):
     name = "grappa"
     GRAIN = 2048        # bulk accesses delegate per 2 KiB segment (no caching)
 
@@ -241,7 +258,7 @@ class GrappaBackend:
         if server != th.server:
             self.sim.rpc(th, server, req_bytes=64 + size)
         raw = self.heap.alloc_on(server, size, data)
-        return GHandle(raw, size)
+        return GHandle(raw, size, backend=self)
 
     def _ndelegations(self, h: GHandle, nbytes: int) -> int:
         """Bulk payloads delegate per segment; small *structured* objects
@@ -347,11 +364,13 @@ class GrappaBackend:
         self.heap.get(h.raw).data = data
 
     def update(self, th, h: GHandle, fn: Callable[[Any], Any]) -> Any:
-        # Delegation executes the closure at the home — single round trip.
+        # Delegation executes the closure at the home — single round trip
+        # (cheaper than the generic read+write guard pair; keep the
+        # override).
         self._delegate(th, h, 64, 64, mutates=True)
         obj = self.heap.get(h.raw)
         obj.data = fn(obj.data)
         return obj.data
 
-    def free(self, th, h: GHandle) -> None:
+    def drop(self, th, h: GHandle) -> None:
         self.heap.free(h.raw)

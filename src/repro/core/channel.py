@@ -74,14 +74,22 @@ class Channel:
             self.q.append((v, th.t_us))
         self.sent += len(values)
 
-    def flush_sends(self) -> None:
+    def flush_sends(self, only_tid: int | None = None) -> None:
         """Settle staged sends: one wire message per (sender, destination
         server) pair carrying that pair's pointer words; values enqueue in
-        original send order (FIFO preserved)."""
+        original send order (FIFO preserved).  ``only_tid`` settles a
+        single sender (a region exit): that thread's staged sends ring,
+        other senders' stay staged — per-sender FIFO is unaffected."""
         if not self._staged:
             return
         sim = self.cluster.sim
-        staged, self._staged = self._staged, []
+        if only_tid is None:
+            staged, self._staged = self._staged, []
+        else:
+            staged = [e for e in self._staged if e[1].tid == only_tid]
+            if not staged:
+                return
+            self._staged = [e for e in self._staged if e[1].tid != only_tid]
         groups: dict[tuple[int, int | None], list] = {}
         for v, th, dst in staged:
             groups.setdefault((th.tid, dst), []).append(th)

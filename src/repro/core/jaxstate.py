@@ -88,7 +88,9 @@ class OwnedState:
 
 
 class StateRef:
-    """Immutable borrow: a colored read-only view."""
+    """Immutable borrow: a colored read-only view.  Use as a scoped guard
+    (``with state.borrow() as tree:``) — same RAII discipline as the DSM
+    layer's ``ReadGuard``; use after drop raises ``BorrowError``."""
 
     def __init__(self, owner: OwnedState, addr: ColoredAddr):
         self.owner = owner
@@ -96,8 +98,14 @@ class StateRef:
         self._dropped = False
 
     def deref(self) -> Any:
-        assert not self._dropped
+        if self._dropped:
+            raise BorrowError(
+                f"{self.addr.name}: payload used outside the guard scope")
         return self.owner._tree
+
+    @property
+    def value(self) -> Any:
+        return self.deref()
 
     def drop(self) -> None:
         if not self._dropped:
@@ -113,22 +121,40 @@ class StateRef:
 
 
 class StateMutRef:
-    """Exclusive write epoch; color bump + epoch hooks fire on drop."""
+    """Exclusive write epoch; color bump + epoch hooks fire on drop.  Use
+    as a scoped guard (``with state.borrow_mut() as m:``) — the same
+    ``value``/``set``/``update`` slot surface as the DSM ``WriteGuard``;
+    an exception inside the scope still drops the borrow, and use after
+    drop raises ``BorrowError``."""
 
     def __init__(self, owner: OwnedState):
         self.owner = owner
         self._dropped = False
         self._accessed = False
 
+    def _check_open(self) -> None:
+        if self._dropped:
+            raise BorrowError(f"{self.owner.addr.name}: write slot used "
+                              "outside the guard scope")
+
     def deref_mut(self) -> Any:
-        assert not self._dropped
+        self._check_open()
         self._accessed = True
         return self.owner._tree
 
+    @property
+    def value(self) -> Any:
+        return self.deref_mut()
+
     def set(self, tree: Any) -> None:
-        assert not self._dropped
+        self._check_open()
         self._accessed = True
         self.owner._tree = tree
+
+    def update(self, fn: Callable[[Any], Any]) -> Any:
+        val = fn(self.deref_mut())
+        self.set(val)
+        return val
 
     def drop(self) -> None:
         if self._dropped:

@@ -1,6 +1,42 @@
 """DRust's ownership-guided coherence protocol (paper §4.1.1, Appendix B).
 
-Implements, operation-for-operation:
+The user-facing surface is the **scoped-guard API** (``core/protocol.py``):
+
+    with box.read(th) as v:        # enter = immutable borrow + deref
+        use(v)                     # body  = the deref'd payload
+                                   # exit  = DropRef (release the pin)
+
+    with box.write(th) as w:       # enter = exclusive mutable borrow
+        w.set(new_value)           # deref_mut + store
+                                   # exit  = DropMutRef (the write-back)
+
+    with cluster.region(th) as r:  # batching scope (see core/runtime.py)
+        r.prefetch(boxes)          # speculative read doorbells
+        ...                        # exit = coalescer settle point
+
+The guard scope *is* the borrow lifetime, so the runtime is told the settle
+points (quantum close, write-back, release) instead of inferring them, and
+an exception inside a guard body structurally releases the borrow — no
+unbalanced-drop leaks.  The legacy call-pair surface
+(``backend.read/write/update/free``) is kept as a thin shim implemented on
+top of the guards, charging byte-identical costs.
+
+Legacy call pairs → guard surface migration:
+
+    ====================================  ===================================
+    legacy (manual call pairs)            scoped guards
+    ====================================  ===================================
+    ``r = box.borrow(th)``                ``with box.read(th) as v: ...``
+    ``v = r.deref(th); r.drop(th)``
+    ``m = box.borrow_mut(th)``            ``with box.write(th) as w:``
+    ``m.deref_mut(th); ...; m.drop(th)``  ``    w.set(x)  # or w.value / w.update(fn)``
+    ``val = backend.read(th, box)``       unchanged (shim over the read guard)
+    ``backend.write(th, box, x)``         unchanged (shim over the write guard)
+    ``backend.prefetch(th, boxes)``       ``with cluster.region(th) as r: r.prefetch(boxes)``
+    ``val, ref = read_cached(th, box)``   ``r.pin(boxes)`` inside a region
+    ====================================  ===================================
+
+Underneath, the protocol is implemented operation-for-operation:
 
   * Algorithm 4  — immutable-reference Deref / DropRef (cache hashmap H)
   * Algorithm 6  — mutable-reference DerefMut (move-on-remote-write, pointer
@@ -14,6 +50,11 @@ Implements, operation-for-operation:
   * Appendix D.2 — reference creation & ownership transfer (cache eviction)
   * §4.1.3       — TBox affinity groups (batched group fetch/move, check-free
                    deref) and spawn_to support hooks
+
+``DrustRuntime`` implements the backend-generic ``ProtocolBackend`` ABC —
+the same verb surface as the GAM/Grappa baselines — so the applications are
+backend-generic; only DRust's implementation threads real ownership state
+through the verbs.
 
 Python has no borrow checker, so Rust's *static* guarantees are enforced
 dynamically: every DBox tracks live borrows and raises ``BorrowError`` on
@@ -35,10 +76,8 @@ from . import addr as A
 from .cache import LocalCache
 from .heap import GlobalHeap, Obj
 from .net import Sim
-
-
-class BorrowError(RuntimeError):
-    """A program the Rust borrow checker would have rejected."""
+from .protocol import (BorrowError, ProtocolBackend, ReadGuard, WriteGuard,
+                       register_backend)
 
 
 try:
@@ -93,6 +132,16 @@ class DBox:
     def __repr__(self):
         return (f"DBox(g={A.clear_color(self.g):#x}c{A.get_color(self.g)}, "
                 f"l={self.l:#x}, u={self.u})")
+
+    # Scoped-guard surface -------------------------------------------------
+    def read(self, th) -> ReadGuard:
+        """``with box.read(th) as v:`` — scoped immutable borrow."""
+        return ReadGuard(self.rt, th, self)
+
+    def write(self, th) -> WriteGuard:
+        """``with box.write(th) as w:`` — scoped mutable borrow; exit is
+        the DropMutRef write-back."""
+        return WriteGuard(self.rt, th, self)
 
     # Rust surface: borrows ------------------------------------------------
     def borrow(self, th) -> "Ref":
@@ -291,8 +340,13 @@ class StackRef:
             rt.on_write_visible(A.clear_color(self.parent.g))
 
 
-class DrustRuntime:
+@register_backend
+class DrustRuntime(ProtocolBackend):
     """Per-cluster protocol engine: heap + caches + the op implementations.
+
+    Implements the backend-generic ``ProtocolBackend`` verb surface (it IS
+    the drust backend — the old ``DrustBackend`` facade survives as a thin
+    deprecated shim), plus the owner/borrow primitives the guards build on.
 
     ``batch_io`` selects the communication plane: ``True`` (default) uses
     doorbell coalescing for group fetches and the async pipeline for
@@ -300,6 +354,12 @@ class DrustRuntime:
     synchronous write-backs — for A/B cost ablations.  Protocol *state* is
     identical under both planes; only the cost accounting differs.
     """
+
+    name = "drust"
+    supports_ownership = True
+    supports_affinity = True
+    supports_prefetch = True
+    supports_coalescing = True
 
     def __init__(self, sim: Sim, heap: GlobalHeap | None = None,
                  batch_io: bool = True):
@@ -329,8 +389,62 @@ class DrustRuntime:
             H.on_spec_drop = (
                 lambda cid: self._dispose_spec(cid, "invalidated"))
 
+    # ---- guard hooks (the scoped-borrow surface) -------------------------
+    def _enter_read(self, th, box: DBox):
+        """Read-guard entry: register with the coalescer when it wants the
+        deref (the registration borrow is owned by the coalescer and drops
+        at the flush), else take the borrow eagerly (Algorithm 4)."""
+        co = self.coalescer
+        if co is not None and co.wants(th, box):
+            return None, co.register(th, box)
+        r = box.borrow(th)
+        return r, r.deref(th)
+
+    def _exit_read(self, th, box: DBox, token) -> None:
+        if token is not None:
+            token.drop(th)
+
+    def _enter_pin(self, th, box: DBox):
+        """Region pin: always the eager held borrow (never a coalescer
+        registration — a registration flushes on a conflicting write
+        instead of excluding it, which is the opposite of a pin)."""
+        r = box.borrow(th)
+        return r, r.deref(th)
+
+    def _enter_write(self, th, box: DBox):
+        return box.borrow_mut(th)
+
+    def _write_value(self, th, box: DBox, m: "MutRef") -> Any:
+        return m.deref_mut(th)
+
+    def _write_set(self, th, box: DBox, m: "MutRef", data: Any) -> None:
+        if not m.accessed:
+            m.deref_mut(th)                  # first touch: Algorithm 6
+        self.heap.get(A.clear_color(m.g)).data = data
+
+    def _exit_write(self, th, box: DBox, m: "MutRef") -> None:
+        m.drop(th)                           # DropMutRef: the write-back
+
+    # ---- whole-object verbs (thin shims over the guards) -----------------
+    def read(self, th, box: DBox) -> Any:
+        with ReadGuard(self, th, box) as v:
+            return v
+
+    def write(self, th, box: DBox, data: Any) -> None:
+        with WriteGuard(self, th, box) as w:
+            w.set(data)
+
+    def read_cached(self, th, box: DBox) -> tuple[Any, "Ref"]:
+        """Long-lived immutable borrow (caller drops); prefer
+        ``Region.pin`` on the guard surface."""
+        r = box.borrow(th)
+        return r.deref(th), r
+
+    def drop(self, th, box: DBox) -> None:
+        self.drop_box(th, box)
+
     # ---- allocation ------------------------------------------------------
-    def alloc(self, th, size: int, data: Any, server: int | None = None,
+    def alloc(self, th, size: int, data: Any = None, server: int | None = None,
               tie_to: DBox | None = None) -> DBox:
         """Global allocation (§4.2.1): local-first, controller may redirect.
 
@@ -881,36 +995,35 @@ class DrustRuntime:
         accounting coalesces."""
         sim = self.sim
         refs = [b.borrow(th) for b in boxes]
-        if not self.batch_io:            # naive plane: N independent derefs
-            vals = [r.deref(th) for r in refs]
+        try:                             # refs drop even if a deref raises
+            if not self.batch_io:        # naive plane: N independent derefs
+                return [r.deref(th) for r in refs]
+            H = self.caches[th.server]
+            batch = sim.batch()
+            vals = []
+            for r in refs:
+                sim.deref_check(th)
+                if A.server_of(r.g) == th.server:
+                    sim.local_access(th)
+                    vals.append(self.heap.get(A.clear_color(r.g)).data)
+                    continue
+                if r.l == A.NULL:
+                    sim.busy(th, sim.cost.hashmap_us)
+                    e = H.lookup(r.g)
+                    if e is not None:
+                        self._touch_spec(th, H, r.g, e, r.owner)
+                        r.l = e.local
+                        e.refcount += 1
+                    else:
+                        r.l = self._copy_in(th, r.g, batch)
+                        H.insert(r.g, r.l, refcount=1)
+                sim.local_access(th)
+                vals.append(self.heap.get(r.l).data)
+            batch.commit(th)
+            return vals
+        finally:
             for r in refs:
                 r.drop(th)
-            return vals
-        H = self.caches[th.server]
-        batch = sim.batch()
-        vals = []
-        for r in refs:
-            sim.deref_check(th)
-            if A.server_of(r.g) == th.server:
-                sim.local_access(th)
-                vals.append(self.heap.get(A.clear_color(r.g)).data)
-                continue
-            if r.l == A.NULL:
-                sim.busy(th, sim.cost.hashmap_us)
-                e = H.lookup(r.g)
-                if e is not None:
-                    self._touch_spec(th, H, r.g, e, r.owner)
-                    r.l = e.local
-                    e.refcount += 1
-                else:
-                    r.l = self._copy_in(th, r.g, batch)
-                    H.insert(r.g, r.l, refcount=1)
-            sim.local_access(th)
-            vals.append(self.heap.get(r.l).data)
-        batch.commit(th)
-        for r in refs:
-            r.drop(th)
-        return vals
 
     # ---- memory pressure (§4.2.1) -------------------------------------------
     def evict_caches(self, server: int, target_bytes: int | None = None) -> int:
@@ -925,57 +1038,14 @@ class DrustRuntime:
 
 
 class DrustBackend:
-    """Whole-object read/write facade used by the evaluation applications.
-
-    ``read`` = immutable borrow + deref + drop; ``write``/``update`` =
-    mutable borrow + deref_mut + drop (write-back).  This mirrors how the
-    paper hooks pointer dereferences.
-    """
+    """Deprecated alias kept for import compatibility: ``DrustRuntime``
+    itself implements the ``ProtocolBackend`` verb surface now.  This shim
+    just forwards every attribute to the runtime."""
 
     name = "drust"
 
     def __init__(self, rt: DrustRuntime):
         self.rt = rt
 
-    def alloc(self, th, size: int, data: Any = None, server: int | None = None,
-              tie_to: DBox | None = None) -> DBox:
-        return self.rt.alloc(th, size, data, server=server, tie_to=tie_to)
-
-    def read(self, th, box: DBox) -> Any:
-        co = self.rt.coalescer
-        if co is not None and co.wants(th, box):
-            return co.register(th, box)
-        r = box.borrow(th)
-        val = r.deref(th)
-        r.drop(th)
-        return val
-
-    def prefetch(self, th, boxes) -> int:
-        """Speculative group fetch: post the read doorbells now, fence at
-        first materialized use (see ``DrustRuntime.prefetch``)."""
-        return self.rt.prefetch(th, boxes)
-
-    def read_cached(self, th, box: DBox) -> tuple[Any, Ref]:
-        """Long-lived immutable borrow (caller drops)."""
-        r = box.borrow(th)
-        return r.deref(th), r
-
-    def read_many(self, th, boxes) -> list:
-        """Doorbell-batched reads: cold misses coalesce per source server."""
-        return self.rt.read_many(th, boxes)
-
-    def write(self, th, box: DBox, data: Any) -> None:
-        m = box.borrow_mut(th)
-        m.deref_mut(th)
-        self.rt.heap.get(A.clear_color(m.g)).data = data
-        m.drop(th)
-
-    def update(self, th, box: DBox, fn: Callable[[Any], Any]) -> Any:
-        m = box.borrow_mut(th)
-        val = fn(m.deref_mut(th))
-        self.rt.heap.get(A.clear_color(m.g)).data = val
-        m.drop(th)
-        return val
-
-    def free(self, th, box: DBox) -> None:
-        self.rt.drop_box(th, box)
+    def __getattr__(self, attr: str) -> Any:
+        return getattr(self.rt, attr)

@@ -32,10 +32,11 @@ from dataclasses import dataclass, field
 from typing import Any, Callable
 
 from . import addr as A
-from .baselines import GamBackend, GrappaBackend
+from . import baselines as _baselines      # noqa: F401 — registers gam/grappa
 from .heap import GlobalHeap
 from .net import CostModel, Sim
-from .ownership import DrustBackend, DrustRuntime, _clone
+from .ownership import _clone              # importing also registers drust
+from .protocol import Region, backend_class
 
 
 class Thread:
@@ -287,6 +288,12 @@ class CoalescePolicy:
     amortize_frac: float = 0.03        # knee target: base <= frac * marginal
     pending_cap: int = 64              # adaptive count budget ceiling
     ewma_alpha: float = 0.25           # deref-size tracker smoothing
+    # Latency-exposure SLO: force a flush once the OLDEST registered deref
+    # has been pending longer than this budget (us of virtual time).  The
+    # count/byte budgets bound doorbell *size*; this bounds how long a
+    # registered deref's materialization can be deferred — the exposure
+    # cost the amortization knee trades against.  None = no SLO.
+    max_expose_us: float | None = None
 
     def budgets(self, cost, qps: int, ooo: bool,
                 ewma_bytes: float) -> tuple[int, int | None]:
@@ -321,11 +328,13 @@ class DerefCoalescer:
         self.policy = policy or CoalescePolicy()
         self.pending: dict[int, tuple[Any, list]] = {}  # tid -> (th, [(box, ref)])
         self.pending_bytes: dict[int, int] = {}
+        self.first_reg_t: dict[int, float] = {}         # tid -> oldest reg time
         self.by_box: dict[Any, set[int]] = {}           # box -> tids (identity)
         self.ewma_bytes = 0.0
         self.flushes = 0
         self.flushed_derefs = 0
         self.registered = 0
+        self.expose_flushes = 0                         # SLO-forced flushes
 
     def wants(self, th, box) -> bool:
         """Registration applies to non-owning derefs of *cold remote*
@@ -362,6 +371,7 @@ class DerefCoalescer:
         ref = box.borrow(th)
         items.append((box, ref))
         self.by_box.setdefault(box, set()).add(tid)
+        self.first_reg_t.setdefault(tid, th.t_us)
         nbytes = rt.heap.group_bytes(A.clear_color(box.g))
         self.pending_bytes[tid] += nbytes
         a = self.policy.ewma_alpha
@@ -370,9 +380,16 @@ class DerefCoalescer:
         self.registered += 1
         n_budget, b_budget = self.policy.budgets(
             rt.sim.cost, rt.sim.qps, rt.sim.ooo, self.ewma_bytes)
+        expose = self.policy.max_expose_us
         if (len(items) >= n_budget
                 or (b_budget is not None
                     and self.pending_bytes[tid] >= b_budget)):
+            self.flush(th)
+        elif (expose is not None
+                and th.t_us - self.first_reg_t[tid] >= expose):
+            # Latency-exposure SLO: the oldest registered deref has been
+            # deferred past the budget — close the quantum now.
+            self.expose_flushes += 1
             self.flush(th)
         return _clone(rt.heap.get(A.clear_color(box.g)).data)
 
@@ -381,6 +398,7 @@ class DerefCoalescer:
         pending set, then the registration borrows drop."""
         ent = self.pending.pop(th.tid, None)
         self.pending_bytes.pop(th.tid, None)
+        self.first_reg_t.pop(th.tid, None)
         if not ent:
             return 0
         _, items = ent
@@ -431,18 +449,16 @@ class Cluster:
                        qps_per_thread=qps_per_thread, ooo=ooo)
         self.heap = GlobalHeap(n_servers, partition_bytes)
         self.backend_name = backend
-        self.backend_drust = backend == "drust"
         self.batch_io = batch_io
         self.channels: list = []               # auto mode: quantum-settled
-        if backend == "drust":
-            self.drust = DrustRuntime(self.sim, self.heap, batch_io=batch_io)
-            self.backend = DrustBackend(self.drust)
-        elif backend == "gam":
-            self.backend = GamBackend(self.sim, self.heap, batch_io=batch_io)
-        elif backend == "grappa":
-            self.backend = GrappaBackend(self.sim, self.heap, batch_io=batch_io)
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
+        # Every protocol engine implements the ProtocolBackend ABC and is
+        # constructed uniformly from the registry; capability flags
+        # (supports_*) replace backend-name special cases downstream.
+        self.backend = backend_class(backend)(self.sim, self.heap,
+                                              batch_io=batch_io)
+        self.backend_drust = self.backend.supports_ownership
+        if self.backend_drust:
+            self.drust = self.backend
         # The deref coalescer needs the batched plane (it flushes through
         # read_many doorbells) and ownership-derived borrows (drust only);
         # channel send staging applies under "auto" for every backend.
@@ -461,6 +477,25 @@ class Cluster:
         th = Thread(server)
         self.scheduler.threads.append(th)
         return th
+
+    def region(self, th, prefetch=(), pin=()) -> Region:
+        """``with cluster.region(th) as r:`` — scoped batching region.
+
+        Entry applies the optional ``prefetch``/``pin`` hints (also
+        available as ``r.prefetch(...)`` / ``r.pin(...)`` inside the
+        scope); exit is a settle point for exactly this thread's pending
+        work — registered derefs flush as ``read_many`` doorbells, staged
+        channel sends ring, pins release (see ``protocol.Region``)."""
+        return Region(self, th, prefetch=prefetch, pin=pin)
+
+    def settle(self, th) -> None:
+        """Per-thread settle point (a region exit): flush ``th``'s staged
+        channel sends and close its coalescer quantum.  Idempotent — no-op
+        under ``coalesce="manual"`` or when nothing is pending."""
+        for ch in self.channels:
+            ch.flush_sends(only_tid=th.tid)
+        if self.backend_drust and self.drust.coalescer is not None:
+            self.drust.coalescer.flush(th)
 
     def close_quanta(self) -> None:
         """End-of-quantum settle (runtime policy, not app code): flush

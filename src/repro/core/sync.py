@@ -108,18 +108,23 @@ class DMutex:
             th.t_us = self._release_t
         raw = A.clear_color(self.h.g) if hasattr(self.h, "g") else self.h.raw
         obj = self.cluster.heap.get(raw)
-        out = fn(obj)
-        self._release_t = th.t_us                        # section end
-        # Release: DRust posts a one-sided WRITE (fire-and-forget unlock);
-        # GAM posts its release message without waiting for the ack; Grappa's
-        # delegated unlock is a blocking global-memory op.
-        name = self.cluster.backend_name
-        if th.server == self.home:
-            self.cluster.sim.local_access(th)
-        elif name == "drust":
-            self.cluster.sim.net.one_sided_writes += 1
-        elif name == "gam":
-            self.cluster.sim.async_msg(self.home)
-        else:
-            self._lock_verb(th)
-        return out
+        try:
+            return fn(obj)
+        finally:
+            # A raising critical section still unlocks — otherwise every
+            # later acquirer would serialize behind a lock nobody holds
+            # (the unbalanced-release analogue of an unbalanced drop).
+            self._release_t = th.t_us                    # section end
+            # Release: DRust posts a one-sided WRITE (fire-and-forget
+            # unlock); GAM posts its release message without waiting for
+            # the ack; Grappa's delegated unlock is a blocking global-
+            # memory op.
+            name = self.cluster.backend_name
+            if th.server == self.home:
+                self.cluster.sim.local_access(th)
+            elif name == "drust":
+                self.cluster.sim.net.one_sided_writes += 1
+            elif name == "gam":
+                self.cluster.sim.async_msg(self.home)
+            else:
+                self._lock_verb(th)

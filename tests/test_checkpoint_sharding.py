@@ -90,6 +90,54 @@ def test_save_restore_roundtrip(tmp_path):
     assert out["b"]["c"].dtype == jnp.bfloat16
 
 
+def test_quantized_save_restore_roundtrip(tmp_path):
+    """PR-2 follow-on: int8 on disk via ``repro.dist.compression``, exact
+    small leaves, transparent dequantize on restore, error-feedback bound
+    honored, and a real size win."""
+    rng = np.random.default_rng(0)
+    tree = {"w": jnp.asarray(rng.standard_normal((64, 32)), jnp.float32),
+            "b": {"scale": jnp.asarray([1.5, -2.0], jnp.float32),  # small
+                  "h": jnp.asarray(rng.standard_normal(256),
+                                   jnp.bfloat16)},
+            "step": jnp.asarray(17, jnp.int32)}
+    save(tmp_path / "q", tree, color=3, step=3, quantize=True)
+    save(tmp_path / "full", tree, color=3, step=3)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out, manifest = restore(tmp_path / "q", like)
+    # dtypes/structure restored; large float leaves are marked quantized
+    assert manifest["leaves"]["w"]["quantized"]
+    assert manifest["leaves"]["b/h"]["quantized"]
+    assert "quantized" not in manifest["leaves"]["b/scale"]
+    assert "quantized" not in manifest["leaves"]["step"]
+    assert out["w"].dtype == jnp.float32
+    assert out["b"]["h"].dtype == jnp.bfloat16
+    # small/integer leaves are bit-exact
+    np.testing.assert_array_equal(np.asarray(out["b"]["scale"]),
+                                  np.asarray(tree["b"]["scale"]))
+    assert int(out["step"]) == 17
+    # error-feedback bound: |x - deq| <= scale/2 = amax/254
+    w = np.asarray(tree["w"], np.float32)
+    bound = np.abs(w).max() / 254 + 1e-7
+    assert np.abs(np.asarray(out["w"], np.float32) - w).max() <= bound
+    # the quantized snapshot is genuinely smaller on disk (~4x on floats)
+    q_bytes = (tmp_path / "q.npz").stat().st_size
+    full_bytes = (tmp_path / "full.npz").stat().st_size
+    assert q_bytes < full_bytes * 0.5
+
+
+def test_manager_quantized_checkpoints(tmp_path):
+    state = OwnedState("s", {"w": jnp.linspace(-1.0, 1.0, 128)})
+    mgr = CheckpointManager(tmp_path, state, quantize=True)
+    with state.borrow_mut() as m:
+        m.set({"w": jnp.linspace(-2.0, 2.0, 128)})
+    assert mgr.saved
+    like = {"w": jax.ShapeDtypeStruct((128,), jnp.float32)}
+    tree, manifest = mgr.restore_latest(like)
+    assert manifest["leaves"]["w"]["quantized"]
+    np.testing.assert_allclose(np.asarray(tree["w"]),
+                               np.linspace(-2.0, 2.0, 128), atol=2.0 / 127)
+
+
 def test_manager_epoch_batched(tmp_path):
     state = OwnedState("s", {"w": jnp.zeros(4)})
     mgr = CheckpointManager(tmp_path, state, every_n_epochs=2, keep=2)

@@ -1,0 +1,519 @@
+"""Scoped-guard API suite: the RAII ownership surface + ProtocolBackend ABC.
+
+Covers, per the guard redesign:
+
+  * **ABC conformance** — all three protocol engines implement
+    ``ProtocolBackend``; the registry resolves them by name; capability
+    flags replace backend-name special cases.
+  * **Guard/legacy equivalence twin** — the seeded 200-schedule
+    staleness-safety suite from ``test_prefetch_invariants`` re-driven
+    through ``read()`` / ``write()`` / ``region()`` guards must produce
+    **identical NetStats** to the legacy call-pair surface (the guards are
+    a zero-cost abstraction: enter/exit charge exactly what the call pairs
+    charged).
+  * **Borrow misuse** — a write guard inside a read guard raises
+    ``BorrowError`` on *every* backend; payload accessors raise after the
+    guard exits.
+  * **Exception safety** — a raising guard body structurally releases the
+    borrow and flushes the write-back exactly once; a raising region still
+    settles; a raising DMutex critical section still unlocks.
+  * **Region semantics** — exit flushes exactly the thread's registered
+    derefs and staged channel sends; ``pin`` holds cache copies for the
+    region lifetime; ``prefetch`` posts speculative doorbells.
+  * **CoalescePolicy(max_expose_us=...)** — the latency-exposure SLO
+    force-flushes once the oldest registered deref ages past the budget.
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.core import (BorrowError, Cluster, CoalescePolicy, Channel,
+                        DMutex, ProtocolBackend, backend_caps, backend_class)
+
+BACKENDS = ("drust", "gam", "grappa")
+
+N_SERVERS = 4
+N_THREADS = 4
+N_BOXES = 3
+KINDS = ["prefetch", "prefetch", "read", "read", "owner_read", "write",
+         "transfer", "drop"]
+
+
+def make(backend="drust", **kw):
+    cl = Cluster(N_SERVERS, backend=backend, **kw)
+    ths = []
+    for i in range(N_THREADS):
+        th = cl.main_thread(0)
+        th.server = i % N_SERVERS
+        ths.append(th)
+    return cl, ths
+
+
+# --------------------------------------------------------------------------
+#  ProtocolBackend ABC + registry
+# --------------------------------------------------------------------------
+def test_all_backends_implement_the_abc():
+    for b in BACKENDS:
+        cl = Cluster(2, backend=b)
+        assert isinstance(cl.backend, ProtocolBackend)
+        assert cl.backend.name == b
+        assert backend_class(b) is type(cl.backend)
+
+
+def test_capability_flags_replace_name_special_cases():
+    assert backend_caps("drust").supports_ownership
+    assert backend_caps("drust").supports_affinity
+    assert backend_caps("drust").supports_prefetch
+    assert backend_caps("drust").supports_coalescing
+    for b in ("gam", "grappa"):
+        caps = backend_caps(b)
+        assert not caps.supports_ownership
+        assert not caps.supports_prefetch
+        assert not caps.supports_coalescing
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError):
+        backend_class("nope")
+    with pytest.raises(ValueError):
+        Cluster(2, backend="nope")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_verbs_roundtrip_on_every_backend(backend):
+    cl, ths = make(backend)
+    t0, t1 = ths[0], ths[1]
+    h = cl.backend.alloc(t0, 64, b"v1")
+    with h.read(t1) as v:
+        assert v == b"v1"
+    with h.write(t1) as w:
+        w.set(b"v2")
+    assert cl.backend.read(t1, h) == b"v2"
+    assert cl.backend.update(t1, h, lambda x: x + b"!") == b"v2!"
+    cl.backend.transfer(t1, h, 2)       # no-op off drust, transfer on drust
+    cl.backend.drop(t1, h)
+
+
+# --------------------------------------------------------------------------
+#  Guard/legacy equivalence: the seeded staleness-safety twin
+# --------------------------------------------------------------------------
+def _drive_schedule(ops, qps, ooo, tied, guarded: bool):
+    """Execute one prefetch/read/write/transfer/drop schedule through the
+    legacy call-pair verbs (``guarded=False``) or through scoped guards +
+    regions (``guarded=True``); returns the cluster for NetStats
+    comparison.  Staleness is asserted against a versioned oracle either
+    way."""
+    cl, ths = make("drust", qps_per_thread=qps, ooo=ooo)
+    rt = cl.drust
+    version = [0] * N_BOXES
+    boxes = [cl.backend.alloc(ths[0], 256, ("v", 0, 0))]
+    boxes.append(cl.backend.alloc(ths[1 % N_THREADS], 256, ("v", 1, 0),
+                                  tie_to=boxes[0] if tied else None))
+    boxes += [cl.backend.alloc(ths[i % N_THREADS], 256, ("v", i, 0))
+              for i in range(2, N_BOXES)]
+    for kind, t, o, p in ops:
+        th, i = ths[t % N_THREADS], o % N_BOXES
+        box = boxes[i]
+        if box.dropped:
+            continue
+        if kind == "prefetch":
+            if guarded:
+                with cl.region(th) as r:
+                    r.prefetch([box])
+            else:
+                rt.prefetch(th, [box])
+        elif kind == "read":
+            if guarded:
+                with box.read(th) as val:
+                    assert val == ("v", i, version[i])
+            else:
+                assert cl.backend.read(th, box) == ("v", i, version[i])
+        elif kind == "owner_read":
+            assert rt.owner_read(th, box) == ("v", i, version[i])
+        elif kind == "write":
+            version[i] += 1
+            if guarded:
+                with box.write(th) as w:
+                    w.set(("v", i, version[i]))
+            else:
+                cl.backend.write(th, box, ("v", i, version[i]))
+        elif kind == "transfer":
+            cl.backend.transfer(th, box, p % N_SERVERS)
+        elif kind == "drop":
+            cl.backend.drop(th, box)
+    for i in range(N_BOXES):
+        if not boxes[i].dropped:
+            cl.backend.drop(ths[0], boxes[i])
+    cl.sim.wb.fence_all(ths[0])
+    assert not cl.sim.wb._pending
+    return cl
+
+
+def test_guard_twin_matches_legacy_netstats_200_seeded_schedules():
+    """Satellite acceptance: the SAME 200 seeded schedules driven through
+    the guard surface produce NetStats identical to the legacy call-pair
+    surface — the guards defer/charge exactly the same costs."""
+    rng = random.Random(3)
+    for _ in range(200):
+        qps = rng.choice([1, 2, 4])
+        ooo = rng.random() < 0.5
+        tied = rng.random() < 0.5
+        ops = [(rng.choice(KINDS), rng.randrange(N_THREADS),
+                rng.randrange(N_BOXES), rng.randrange(N_SERVERS))
+               for _ in range(rng.randint(1, 40))]
+        legacy = _drive_schedule(ops, qps, ooo, tied, guarded=False)
+        guard = _drive_schedule(ops, qps, ooo, tied, guarded=True)
+        assert (guard.sim.snapshot()["net"]
+                == legacy.sim.snapshot()["net"]), \
+            f"guard surface diverged from legacy on {ops!r}"
+
+
+@pytest.mark.parametrize("backend", ("gam", "grappa"))
+def test_guard_twin_matches_legacy_netstats_baselines(backend):
+    """The generic guard layer is cost-transparent on the baseline
+    protocols too (enter defers, ``set`` stages, exit performs the one
+    legacy write)."""
+    def drive(guarded: bool):
+        cl, ths = make(backend)
+        t0, t1, t2 = ths[0], ths[1], ths[2]
+        hs = [cl.backend.alloc(t0, 256, ("v", k)) for k in range(4)]
+        for rep in range(3):
+            for k, h in enumerate(hs):
+                if guarded:
+                    with h.read(t1) as v:
+                        assert v == ("v", k) or rep > 0
+                    with h.write(t2) as w:
+                        w.set(("v", k))
+                else:
+                    cl.backend.read(t1, h)
+                    cl.backend.write(t2, h, ("v", k))
+        return cl
+    legacy, guard = drive(False), drive(True)
+    assert guard.sim.snapshot()["net"] == legacy.sim.snapshot()["net"]
+
+
+# --------------------------------------------------------------------------
+#  Borrow misuse
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_write_guard_inside_read_guard_raises(backend):
+    cl, ths = make(backend)
+    h = cl.backend.alloc(ths[0], 64, 1)
+    with h.read(ths[0]):
+        with pytest.raises(BorrowError):
+            with h.write(ths[0]) as w:
+                w.set(2)
+    # ...and the failed write attempt left no stuck borrow behind:
+    with h.write(ths[0]) as w:
+        w.set(3)
+    assert cl.backend.read(ths[0], h) == 3
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_read_guard_inside_write_guard_raises(backend):
+    cl, ths = make(backend)
+    h = cl.backend.alloc(ths[0], 64, 1)
+    with h.write(ths[0]) as w:
+        with pytest.raises(BorrowError):
+            with h.read(ths[0]):
+                pass
+        w.set(2)
+    assert cl.backend.read(ths[0], h) == 2
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_payload_use_after_guard_exit_fails(backend):
+    cl, ths = make(backend)
+    h = cl.backend.alloc(ths[0], 64, 7)
+    g = h.read(ths[1])
+    with g as v:
+        assert v == 7
+        assert g.value == 7
+    with pytest.raises(BorrowError):
+        g.value
+    w = h.write(ths[1])
+    with w:
+        w.set(8)
+    with pytest.raises(BorrowError):
+        w.set(9)
+    with pytest.raises(BorrowError):
+        w.value
+    with pytest.raises(BorrowError):
+        w.update(lambda x: x)
+    assert cl.backend.read(ths[1], h) == 8
+
+
+def test_guard_reentry_rejected():
+    cl, ths = make()
+    h = cl.backend.alloc(ths[0], 64, 1)
+    g = h.read(ths[0])
+    with g:
+        pass
+    with pytest.raises(BorrowError):
+        with g:
+            pass
+
+
+# --------------------------------------------------------------------------
+#  Exception safety (the satellite audit's regression tests)
+# --------------------------------------------------------------------------
+def test_raising_write_guard_releases_and_flushes_exactly_once():
+    """A raising guard body must still release the mutable borrow and post
+    the DropMutRef write-back exactly once — structurally, not by caller
+    discipline."""
+    cl, ths = make()
+    t0, t1 = ths[0], ths[1]
+    box = cl.backend.alloc(t0, 64, 10)            # owner slot home = server 0
+    before = cl.sim.net.async_writebacks
+    with pytest.raises(ValueError):
+        with box.write(t1) as w:                  # t1 is remote
+            w.set(99)
+            raise ValueError("app bug")
+    assert not box.live_mut, "mutable borrow leaked through the exception"
+    assert cl.sim.net.async_writebacks == before + 1, \
+        "owner-slot write-back not flushed exactly once"
+    assert cl.backend.read(t0, box) == 99         # the write landed
+    # and the box is immediately borrowable again:
+    with box.write(t0) as w:
+        w.set(100)
+    assert cl.backend.read(t0, box) == 100
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_raising_read_guard_releases_borrow(backend):
+    cl, ths = make(backend)
+    h = cl.backend.alloc(ths[0], 64, 1)
+    with pytest.raises(RuntimeError):
+        with h.read(ths[1]):
+            raise RuntimeError("boom")
+    with h.write(ths[1]) as w:                    # would raise if ref leaked
+        w.set(2)
+    assert cl.backend.read(ths[0], h) == 2
+
+
+def test_raising_region_still_settles():
+    cl, ths = make(coalesce="auto")
+    t1 = ths[1]
+    box = cl.backend.alloc(ths[0], 256, ("v", 0))
+    co = cl.drust.coalescer
+    with pytest.raises(KeyError):
+        with cl.region(t1):
+            with box.read(t1) as v:               # registers (cold remote)
+                assert v == ("v", 0)
+            assert co.pending
+            raise KeyError("app bug")
+    assert not co.pending, "region exit did not settle on the exception path"
+    assert box.live_refs == 0
+
+
+def test_raising_mutex_critical_section_still_unlocks():
+    cl, ths = make()
+    mtx = DMutex(cl, ths[0], value=0)
+    with pytest.raises(ZeroDivisionError):
+        mtx.with_lock(ths[1], lambda obj: 1 / 0)
+    # a later acquirer must not serialize behind the dead holder forever
+    t2 = ths[2]
+    t2.t_us = ths[1].t_us + 1.0
+    out = mtx.with_lock(t2, lambda obj: "ok")
+    assert out == "ok"
+    assert mtx.acquisitions == 2
+
+
+# --------------------------------------------------------------------------
+#  Region semantics
+# --------------------------------------------------------------------------
+def test_region_exit_flushes_registered_derefs():
+    cl, ths = make(coalesce="auto")
+    t1 = ths[1]
+    boxes = [cl.backend.alloc(ths[0], 256, k) for k in range(3)]
+    co = cl.drust.coalescer
+    rt0 = cl.sim.net.round_trips
+    with cl.region(t1):
+        for b in boxes:
+            with b.read(t1):
+                pass
+        assert co.pending, "derefs should register inside the region"
+        assert cl.sim.net.round_trips == rt0
+    assert not co.pending
+    assert co.flushes == 1 and co.flushed_derefs == 3
+    assert cl.sim.net.round_trips > rt0           # the doorbell went out
+
+
+def test_region_exit_settles_only_this_threads_staged_sends():
+    cl, ths = make(coalesce="auto")
+    t1, t2, t3 = ths[1], ths[2], ths[3]
+    ch = Channel(cl)
+    ch.recv_server = t3.server
+    msgs0 = cl.sim.net.two_sided_msgs
+    with cl.region(t1):
+        ch.send(t1, "from-t1")                    # staged (reference send)
+        ch.send(t2, "from-t2")                    # staged, other sender
+        assert len(ch.q) == 0
+    assert len(ch.q) == 1, "t1's staged send should ring at region exit"
+    assert cl.sim.net.two_sided_msgs > msgs0
+    assert len(ch._staged) == 1, "t2's staged send must stay staged"
+    assert ch._staged[0][1] is t2
+
+
+def test_region_pin_holds_cache_copies_for_the_scope():
+    cl, ths = make()
+    t1 = ths[1]
+    box = cl.backend.alloc(ths[0], 512, b"p" * 512)
+    reads0 = cl.sim.net.one_sided_reads
+    with cl.region(t1, pin=[box]):
+        assert cl.sim.net.one_sided_reads == reads0 + 1
+        # pinned: a pressure sweep cannot reclaim the copy
+        cl.drust.evict_caches(t1.server)
+        assert box.g in cl.drust.caches[t1.server].entries
+        with box.read(t1) as v:                   # warm hit, no new READ
+            assert v == b"p" * 512
+        assert cl.sim.net.one_sided_reads == reads0 + 1
+    # pin released: the copy is evictable now
+    cl.drust.evict_caches(t1.server)
+    assert box.g not in cl.drust.caches[t1.server].entries
+
+
+def test_region_prefetch_hint_posts_speculative_doorbells():
+    cl, ths = make()
+    t1 = ths[1]
+    box = cl.backend.alloc(ths[0], 512, b"s" * 512)
+    with cl.region(t1, prefetch=[box]):
+        assert cl.sim.net.speculative_fetches == 1
+        with box.read(t1) as v:
+            assert v == b"s" * 512
+    assert cl.sim.net.late_fences == 1
+    assert cl.sim.net.wasted_prefetches == 0
+
+
+def test_region_hints_after_exit_rejected():
+    cl, ths = make()
+    box = cl.backend.alloc(ths[0], 64, 1)
+    with cl.region(ths[1]) as r:
+        pass
+    with pytest.raises(BorrowError):
+        r.prefetch([box])
+    with pytest.raises(BorrowError):
+        r.pin([box])
+
+
+def test_failed_region_entry_hint_releases_taken_pins():
+    """Regression (review): ``__enter__`` raising means ``__exit__`` never
+    runs — a failing pin hint must release the pins already taken, or the
+    borrows leak forever."""
+    cl, ths = make()
+    t1 = ths[1]
+    a = cl.backend.alloc(ths[0], 64, 1)
+    b = cl.backend.alloc(ths[0], 64, 2)
+    m = b.borrow_mut(ths[0])                      # b is mutably borrowed
+    with pytest.raises(BorrowError):
+        with cl.region(t1, pin=[a, b]):           # pinning b must fail
+            pass
+    m.deref_mut(ths[0])
+    m.drop(ths[0])
+    # a's pin was released on the failure path — a is freely borrowable
+    with a.write(ths[0]) as w:
+        w.set(10)
+    assert cl.backend.read(ths[0], a) == 10
+
+
+def test_failed_read_does_not_leak_borrow_on_baselines():
+    """Regression (review): the guard layer must count the borrow only
+    after the read succeeds — a raising read (e.g. on a dropped handle)
+    may not leave the handle permanently read-borrowed."""
+    cl, ths = make("gam")
+    h = cl.backend.alloc(ths[0], 64, 1)
+    h2 = cl.backend.alloc(ths[0], 64, 2)
+    cl.backend.drop(ths[0], h)
+    with pytest.raises(Exception):
+        with h.read(ths[1]):
+            pass
+    assert h.live_refs == 0, "failed read leaked a guard-layer borrow"
+    with h2.write(ths[1]) as w:                   # other handles unaffected
+        w.set(3)
+
+
+def test_region_pin_is_a_real_borrow_under_auto_coalescing():
+    """Regression (review): under ``coalesce="auto"`` a pin must take the
+    eager held borrow, NOT a coalescer registration — a registration would
+    flush on a conflicting write instead of excluding it, silently
+    dropping the pin's stability guarantee."""
+    cl, ths = make(coalesce="auto")
+    t1 = ths[1]
+    box = cl.backend.alloc(ths[0], 256, ("v", 0))
+    co = cl.drust.coalescer
+    reads0 = cl.sim.net.one_sided_reads
+    with cl.region(t1, pin=[box]):
+        assert not co.pending, "pin was deferred to the coalescer"
+        assert cl.sim.net.one_sided_reads == reads0 + 1   # fetched + pinned
+        assert box.live_refs == 1
+        with pytest.raises(BorrowError):
+            box.borrow_mut(ths[0])                # pin EXCLUDES the writer
+    assert box.live_refs == 0
+    cl.backend.write(ths[0], box, ("v", 1))       # released at exit
+
+
+def test_region_noop_on_baselines():
+    for b in ("gam", "grappa"):
+        cl, ths = make(b)
+        h = cl.backend.alloc(ths[0], 64, 1)
+        with cl.region(ths[1], prefetch=[h]) as r:
+            assert r.prefetch([h]) == 0           # no safe speculation
+            with h.read(ths[1]) as v:
+                assert v == 1
+        assert cl.sim.net.speculative_fetches == 0
+
+
+# --------------------------------------------------------------------------
+#  CoalescePolicy latency-exposure SLO
+# --------------------------------------------------------------------------
+def test_max_expose_us_forces_flush():
+    cl, ths = make(coalesce="auto",
+                   coalesce_policy=CoalescePolicy(max_expose_us=0.5))
+    t1 = ths[1]
+    boxes = [cl.backend.alloc(ths[0], 256, k) for k in range(2)]
+    co = cl.drust.coalescer
+    with boxes[0].read(t1):
+        pass                                      # registers at age 0
+    assert co.pending
+    cl.sim.compute(t1, 10_000)                    # ~3.8us of virtual time
+    with boxes[1].read(t1):
+        pass                                      # oldest deref now > 0.5us
+    assert not co.pending, "SLO breach did not close the quantum"
+    assert co.flushes == 1 and co.expose_flushes == 1
+    assert co.flushed_derefs == 2
+
+
+def test_no_expose_slo_keeps_quantum_open():
+    cl, ths = make(coalesce="auto")               # adaptive, no SLO
+    t1 = ths[1]
+    boxes = [cl.backend.alloc(ths[0], 256, k) for k in range(2)]
+    co = cl.drust.coalescer
+    with boxes[0].read(t1):
+        pass
+    cl.sim.compute(t1, 10_000)
+    with boxes[1].read(t1):
+        pass
+    assert co.pending and co.flushes == 0
+    assert co.expose_flushes == 0
+    cl.close_quanta()
+
+
+def test_expose_slo_bounds_exposure_in_a_sweep_trace():
+    """The bench-sweep configuration: the SLO policy flushes strictly more
+    often than the unconstrained adaptive policy on the same trace, never
+    letting a registered deref age past the budget."""
+    from benchmarks.protocol_micro import EXPOSE_THINK_CYCLES, _coalesce_run
+    auto_cl, _ = _coalesce_run("bulk", "auto", n_objects=48,
+                               think_cycles=EXPOSE_THINK_CYCLES)
+    slo_cl, _ = _coalesce_run("bulk", "expose", n_objects=48,
+                              think_cycles=EXPOSE_THINK_CYCLES)
+    auto_cl.makespan_us()                         # settle trailing quanta
+    slo_cl.makespan_us()
+    auto_co, slo_co = auto_cl.drust.coalescer, slo_cl.drust.coalescer
+    assert slo_co.expose_flushes > 0
+    assert slo_co.flushes > auto_co.flushes
+    # identical work either way: same derefs materialized
+    assert slo_co.flushed_derefs == auto_co.flushed_derefs == 48
