@@ -22,7 +22,14 @@ sweeps) and compares the *deterministic* metrics against the committed
     they appear (app modes and the ``prefetch`` section);
   * the coalesce-budget sweep (``coalesce_sweep``): the adaptive policy's
     makespan within tolerance of its committed value, and its
-    round-trip/flush counters exactly.
+    round-trip/flush counters exactly;
+  * the crash-recovery sweep (``recovery``): fail-over makespan within
+    tolerance per (cluster size, lost working set) point, with the
+    disposition counters (``restored_bytes``, ``rehomed_boxes``,
+    ``orphaned_cids``, ``lost_writes``, ``broken_locks``,
+    ``dead_threads``) pinned exactly — plus the ``recovery_slo`` pair:
+    working-set scaling must keep dominating cluster-size scaling
+    (``slo_ok`` may never flip to false).
 
 Wall-clock microsecond columns are ignored — they are noise on shared CI
 runners; everything gated here comes from the deterministic simulator.
@@ -51,6 +58,8 @@ QP_EXACT = ("fences", "fenced_verbs", "ooo_completions", "qp_switches",
 COALESCE_EXACT = ("round_trips", "flushes", "coalesced_derefs")
 PREFETCH_EXACT = ("round_trips", "speculative_fetches", "late_fences",
                   "wasted_prefetches")
+RECOVERY_EXACT = ("restored_bytes", "rehomed_boxes", "orphaned_cids",
+                  "lost_writes", "broken_locks", "dead_threads")
 
 
 def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
@@ -104,7 +113,8 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
                     f"qp_sweep/{name}/{metric}: {cur} != baseline {base} "
                     f"(deterministic counter, pinned exactly)")
     for section, exact in (("coalesce_sweep", COALESCE_EXACT),
-                           ("prefetch", PREFETCH_EXACT)):
+                           ("prefetch", PREFETCH_EXACT),
+                           ("recovery", RECOVERY_EXACT)):
         for name, base_entry in sorted(baseline.get(section, {}).items()):
             cur_entry = current.get(section, {}).get(name)
             if cur_entry is None:
@@ -126,6 +136,20 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
                         f"{section}/{name}/{metric}: {cur_entry.get(metric)} "
                         f"!= baseline {base_entry[metric]} (deterministic "
                         f"counter, pinned exactly)")
+    # Recovery SLO: not a counter comparison — the committed baseline says
+    # working-set scaling dominates cluster-size scaling, and it must stay
+    # that way on the current run (schema has no makespan_us, so it stays
+    # out of the generic section loop above).
+    if baseline.get("recovery_slo", {}).get("slo_ok"):
+        cur_slo = current.get("recovery_slo")
+        if cur_slo is None:
+            failures.append("recovery_slo: missing from current run")
+        elif not cur_slo.get("slo_ok"):
+            failures.append(
+                f"recovery_slo: slo_ok flipped false — working-set scale "
+                f"{cur_slo.get('ws_scale_4srv_8to64_boxes')} no longer "
+                f"dominates cluster scale "
+                f"{cur_slo.get('srv_scale_8boxes_2to16_srv')}")
     for name, meta in sorted(baseline.get("micro", {}).items()):
         if not name.endswith("_msgs"):
             continue                       # wall-clock rows: not gated
@@ -174,6 +198,8 @@ def main(argv=None) -> int:
     n_gated += len(baseline.get("coalesce_sweep", {})) * (
         1 + len(COALESCE_EXACT))
     n_gated += len(baseline.get("prefetch", {})) * (1 + len(PREFETCH_EXACT))
+    n_gated += len(baseline.get("recovery", {})) * (1 + len(RECOVERY_EXACT))
+    n_gated += 1 if baseline.get("recovery_slo", {}).get("slo_ok") else 0
     print(f"bench gate OK: {n_gated} metrics within "
           f"{100 * args.tolerance:.0f}% of {args.baseline}")
     return 0

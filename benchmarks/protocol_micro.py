@@ -22,6 +22,12 @@ budgets and three request mixes (small / bulk / mixed object sizes) on the
 multi-QP plane, and pins that the *adaptive* policy tracks the best static
 batch size per mix — large quanta when the per-QP message rate dominates,
 knee-bounded quanta when bandwidth does.
+
+The recovery sweep (``recovery_sweep``/``recovery_summary``) crashes one
+server under the OOO plane (with a dirty unflushed write and an in-flight
+speculative READ to quiesce) at 2/4/8/16 servers x two working-set sizes,
+and gates the paper-shaped SLO: the fail-over makespan scales with the
+dead server's restored working set, not with cluster size.
 """
 
 from __future__ import annotations
@@ -313,6 +319,78 @@ def coalesce_summary() -> dict:
     return out
 
 
+# --------------------------------------------------------------------------
+#  Crash-recovery sweep (fail-over SLO)
+# --------------------------------------------------------------------------
+def _recovery_run(n_servers: int, n_boxes: int, size: int = 4096):
+    """One fail-over trace: server 1 owns ``n_boxes`` objects of ``size``
+    bytes (flushed), plus one dirty unflushed write and one in-flight
+    speculative READ out of it — so the quiesce, the epoch revert, AND the
+    promote-restore paths all run.  Returns (cluster, RecoveryReport)."""
+    cl = Cluster(n_servers, backend="drust", replicate=True,
+                 qps_per_thread=2, ooo=True)
+    t0 = cl.main_thread(0)
+    tv = cl.main_thread(0); tv.server = 1
+    boxes = [cl.backend.alloc(tv, size, i, server=1) for i in range(n_boxes)]
+    cl.replicator.flush_epoch()
+    cl.backend.write(tv, boxes[0], -1)           # dirty at crash time
+    cl.drust.prefetch(t0, [boxes[1]])            # orphaned speculative READ
+    cl.recovery.crash(1)
+    rep = cl.recovery.fail_over(1, t0)
+    return cl, rep
+
+
+def recovery_sweep(server_counts=(2, 4, 8, 16), box_counts=(8, 64)):
+    """Fail-over makespan vs (cluster size, lost working set): the derived
+    column is the restored partition image in bytes — the quantity the
+    makespan must track (SLO), while the server-count axis only adds the
+    per-survivor restripe handshake."""
+    rows = []
+    for n in server_counts:
+        for nb in box_counts:
+            cl, rep = _recovery_run(n, nb)
+            rows.append((f"recovery_{n}srv_{nb}boxes_makespan",
+                         rep.makespan_us, rep.restored_bytes))
+    return rows
+
+
+def recovery_summary() -> dict:
+    """Deterministic recovery trajectory for ``BENCH_protocol.json``: the
+    per-point counters are pinned exactly, the makespans within tolerance,
+    and the SLO ratio pair — working-set scaling must dominate
+    cluster-size scaling — is gated as a boolean."""
+    out = {}
+    for n in (2, 4, 8, 16):
+        for nb in (8, 64):
+            cl, rep = _recovery_run(n, nb)
+            out[f"srv{n}_boxes{nb}"] = {
+                "makespan_us": round(rep.makespan_us, 3),
+                "restored_bytes": rep.restored_bytes,
+                "rehomed_boxes": rep.rehomed_boxes,
+                "orphaned_cids": rep.orphaned_cids,
+                "lost_writes": rep.lost_writes,
+                "broken_locks": rep.broken_locks,
+                "dead_threads": rep.dead_threads,
+            }
+    return out
+
+
+def recovery_slo() -> dict:
+    """The SLO gate: growing the WORKING SET 8x at fixed cluster must move
+    the makespan more than growing the CLUSTER 8x at fixed working set."""
+    spans = {}
+    for n, nb in ((4, 8), (4, 64), (2, 8), (16, 8)):
+        _, rep = _recovery_run(n, nb)
+        spans[(n, nb)] = rep.makespan_us
+    ws_scale = spans[(4, 64)] / spans[(4, 8)]
+    srv_scale = spans[(16, 8)] / spans[(2, 8)]
+    return {
+        "ws_scale_4srv_8to64_boxes": round(ws_scale, 3),
+        "srv_scale_8boxes_2to16_srv": round(srv_scale, 3),
+        "slo_ok": bool(ws_scale > srv_scale),
+    }
+
+
 def clone_fastpath_guard(n_elems: int = 4096, reps: int = 30):
     """Microbenchmark guard for ``ownership._clone``: flat scalar containers
     must take the shallow fast path, not ``deepcopy``.  ``derived`` is the
@@ -350,6 +428,7 @@ def all_rows():
     rows += qp_writeback_sweep()
     rows += qp_readmany_sweep()
     rows += coalesce_budget_sweep()
+    rows += recovery_sweep()
     rows += clone_fastpath_guard()
     return rows
 

@@ -51,6 +51,11 @@ def quick(out_path: str = "BENCH_protocol.json") -> dict:
         # Adaptive deref coalescer vs the best static quantum budget, per
         # request mix (makespan gated within tolerance, counters exactly).
         "coalesce_sweep": protocol_micro.coalesce_summary(),
+        # Crash-recovery trajectory: fail-over makespan vs (cluster size,
+        # lost working set), counters pinned exactly; the SLO pair gates
+        # that working-set scaling dominates cluster-size scaling.
+        "recovery": protocol_micro.recovery_summary(),
+        "recovery_slo": protocol_micro.recovery_slo(),
         "prefetch": {},
     }
     for app, fn, kw in (
@@ -107,6 +112,11 @@ def main() -> None:
         for name, meta in summary["prefetch"].items():
             print(f"quick_prefetch_{name},{meta['makespan_us']:.2f},"
                   f"{meta['speculative_fetches']}")
+        for name, meta in summary["recovery"].items():
+            print(f"quick_recovery_{name},{meta['makespan_us']:.2f},"
+                  f"{meta['restored_bytes']}")
+        slo = summary["recovery_slo"]
+        print(f"quick_recovery_slo_ok,0.00,{slo['slo_ok']}")
         print("wrote BENCH_protocol.json", file=sys.stderr)
         return
 

@@ -14,11 +14,12 @@ from . import addr
 from .baselines import GamBackend, GrappaBackend, GHandle
 from .cache import LocalCache
 from .channel import Channel
-from .fault import Replicator
+from .fault import RecoveryManager, RecoveryReport, Replicator
 from .heap import GlobalHeap, Obj, Partition
 from .jaxstate import (ColoredAddr, OwnedState, ReplicaSlot, StateCache,
                        StateMutRef, StateRef)
-from .net import CostModel, IOBatch, NetStats, Sim, WritebackQueue
+from .net import (CostModel, IOBatch, NetStats, ServerLostError, Sim,
+                  WritebackQueue)
 from .ownership import (BorrowError, DBox, DrustBackend, DrustRuntime, MutRef,
                         Ref, StackRef)
 from .protocol import (ProtocolBackend, ReadGuard, Region, WriteGuard,
@@ -34,8 +35,9 @@ __all__ = [
     "DrustRuntime", "GamBackend",
     "GHandle", "GlobalController", "GlobalHeap", "GrappaBackend", "IOBatch",
     "LocalCache", "MutRef", "NetStats", "Obj", "OwnedState", "Partition",
-    "ProtocolBackend", "ReadGuard", "Ref", "Region", "ReplicaSlot",
-    "Replicator", "Scheduler", "Sim", "StackRef",
+    "ProtocolBackend", "ReadGuard", "RecoveryManager", "RecoveryReport",
+    "Ref", "Region", "ReplicaSlot",
+    "Replicator", "Scheduler", "ServerLostError", "Sim", "StackRef",
     "StateCache", "StateMutRef", "StateRef", "Thread", "WritebackQueue",
     "WriteGuard",
 ]

@@ -46,6 +46,10 @@ class CacheEntry:
     ref_bit: bool = True  # CLOCK second-chance bit
     speculative: bool = False  # prefetched, completion fence still deferred
     cid: int = 0        # completion id of the speculative fetch doorbell
+    suspect: bool = False  # home server failed while this copy was pinned:
+    #   the frozen snapshot keeps serving its open ReadGuards, but new
+    #   lookups MISS (they must re-fetch the restored epoch value) and the
+    #   copy is freed the moment the last pin drops
 
 
 class LocalCache:
@@ -57,6 +61,9 @@ class LocalCache:
         self._by_cid: dict[int, set[int]] = {}     # spec cid -> colored keys
         self._bytes = 0
         self._hand = 0                             # CLOCK hand (key index)
+        # colored g -> [local, pins]: suspect entries displaced by a
+        # re-fetch while still pinned (see ``insert``); freed at pins==0
+        self._limbo: dict[int, list[int]] = {}
         self.hits = 0
         self.misses = 0
         # Runtime hook: a *speculative* entry left the cache without being
@@ -67,12 +74,16 @@ class LocalCache:
 
     def lookup(self, colored_g: int) -> CacheEntry | None:
         e = self.entries.get(colored_g)
-        if e is not None:
+        if e is not None and not e.suspect:
             self.hits += 1
             e.ref_bit = True
-        else:
-            self.misses += 1
-        return e
+            return e
+        # A suspect entry is invisible to new readers: its bytes may hold a
+        # write that died unflushed with the home server, and serving them
+        # would resurrect it.  Open pins keep their frozen snapshot through
+        # the direct local address; everyone else misses and re-fetches.
+        self.misses += 1
+        return None
 
     def insert(self, colored_g: int, local_raw: int, refcount: int = 1,
                speculative: bool = False, cid: int = 0) -> CacheEntry:
@@ -81,6 +92,18 @@ class LocalCache:
         old = self.entries.get(colored_g)
         if old is not None:
             self._drop_index(colored_g, old)
+            if old.suspect and old.refcount > 0:
+                # A new reader re-fetched past a still-pinned suspect copy:
+                # the frozen snapshot must outlive the key collision, so it
+                # parks in limbo until its pins drain (``dec`` drains limbo
+                # first — the pre-crash pins are the ones that drop next).
+                lim = self._limbo.get(colored_g)
+                if lim is None:
+                    self._limbo[colored_g] = [old.local, old.refcount]
+                else:
+                    lim[1] += old.refcount
+            elif old.suspect:
+                self._free_copy(old)
         e = CacheEntry(local_raw, refcount, size=size,
                        speculative=speculative, cid=cid)
         self.entries[colored_g] = e
@@ -132,9 +155,24 @@ class LocalCache:
         return e
 
     def dec(self, colored_g: int) -> None:
+        lim = self._limbo.get(colored_g)
+        if lim is not None:              # a displaced frozen snapshot drains
+            lim[1] -= 1
+            if lim[1] <= 0:
+                del self._limbo[colored_g]
+                if self.partition.contains(lim[0]):
+                    self.partition.free(lim[0])
+            return
         e = self.entries.get(colored_g)
         if e is not None and e.refcount > 0:
             e.refcount -= 1
+            if e.refcount == 0 and e.suspect:
+                # last pin of a crash-frozen snapshot dropped: the copy is
+                # both stale (pre-crash bytes) and unreachable (lookup
+                # misses) — free it now instead of waiting for pressure
+                self.entries.pop(colored_g, None)
+                self._drop_index(colored_g, e)
+                self._free_copy(e)
 
     def remove(self, colored_g: int) -> CacheEntry | None:
         e = self.entries.pop(colored_g, None)
@@ -187,6 +225,44 @@ class LocalCache:
                 self.on_spec_drop(e.cid)
             self._free_copy(e)
             n += 1
+        return n
+
+    def quarantine_home(self, home: int) -> tuple[int, int]:
+        """The home server of some cached objects failed: copies of its
+        boxes may hold writes that died unflushed (the restored replica
+        reverts to the last flushed epoch), so serving them would silently
+        resurrect lost writes.  Unpinned copies are invalidated on the
+        spot; pinned copies (open ``ReadGuard``s — frozen snapshots by
+        contract) are marked *suspect*: they keep serving their holders but
+        are invisible to new lookups and are freed when the last pin drops.
+        Returns ``(invalidated, suspected)`` entry counts."""
+        victims = [(g, e) for g, e in self.entries.items()
+                   if A.server_of(A.clear_color(g)) == home]
+        invalidated = suspected = 0
+        for g, e in victims:
+            if e.refcount > 0:
+                e.suspect = True
+                suspected += 1
+            else:
+                self.entries.pop(g, None)
+                self._drop_index(g, e)       # spec entries fire on_spec_drop
+                self._free_copy(e)
+                invalidated += 1
+        return invalidated, suspected
+
+    def drop_all(self) -> int:
+        """The cache's own server died: every entry is gone with it.  Fires
+        ``on_spec_drop`` for still-speculative entries (their prefetch cids
+        get an ``invalidated`` disposition) but does not touch the backing
+        partition — the crash already cleared it."""
+        n = len(self.entries)
+        for g, e in list(self.entries.items()):
+            self._drop_index(g, e)
+        self.entries.clear()
+        self._by_raw.clear()
+        self._by_cid.clear()
+        self._limbo.clear()
+        self._bytes = 0
         return n
 
     def evict_unreferenced(self) -> int:

@@ -105,6 +105,28 @@ class Channel:
         for v, th, dst in staged:
             self.q.append((v, t_of[(th.tid, dst)]))
 
+    def drop_for_server(self, dead: int) -> int:
+        """Recovery quiesce: dispose staged sends orphaned by ``dead`` —
+        sends FROM threads on the dead server (the sender died before its
+        quantum settled, so the message was never on the wire) and sends
+        TO a receiver pinned on the dead server (nobody will drain them).
+        If the receiver itself lived on the dead server its queue dies
+        with it.  Returns the number of orphaned messages dropped."""
+        n = 0
+        if self._staged:
+            keep = []
+            for v, th, dst in self._staged:
+                if th.server == dead or dst == dead:
+                    n += 1
+                else:
+                    keep.append((v, th, dst))
+            self._staged = keep
+        if self.recv_server == dead:
+            n += len(self.q)
+            self.q.clear()
+            self.recv_server = None
+        return n
+
     def recv(self, th) -> Any:
         self.flush_sends()                   # staged sends land before drain
         sim = self.cluster.sim

@@ -95,6 +95,17 @@ class GlobalHeap:
             for p in self.partitions:
                 p.limit = p.base + partition_bytes
 
+    def add_partition(self, partition_bytes: int | None = None) -> Partition:
+        """Elastic grow: back a new server with a fresh partition.  The
+        global address space already reserves the range (addresses encode
+        the partition index), so growing is just mapping it."""
+        p = Partition(self.n)
+        if partition_bytes is not None:
+            p.limit = p.base + partition_bytes
+        self.partitions.append(p)
+        self.n += 1
+        return p
+
     def partition_of(self, raw: int) -> Partition:
         return self.partitions[A.server_of(raw)]
 

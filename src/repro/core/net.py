@@ -91,6 +91,22 @@ import itertools
 from dataclasses import dataclass, field
 
 
+class ServerLostError(RuntimeError):
+    """A verb, borrow, or payload depended on a server that failed.
+
+    Raised (a) by ``Sim`` when a verb targets a *declared-failed* server or
+    exhausts the degraded-mode retry ladder against an unresponsive one, and
+    (b) by the ownership layer when a guard touches a box whose payload died
+    with its home server (open ``WriteGuard`` broken by fail-over, or a box
+    that had no replica to restore from).  Structured — carries the server —
+    so applications can re-drive work instead of pattern-matching strings.
+    """
+
+    def __init__(self, server: int, msg: str):
+        super().__init__(f"server {server}: {msg}")
+        self.server = server
+
+
 @dataclass(frozen=True)
 class CostModel:
     # Network (InfiniBand 40 Gbps, ConnectX-3-era latencies).
@@ -115,6 +131,19 @@ class CostModel:
     #   (the NIC's per-QP message-rate limit, ~2 M verbs/s: the reason
     #    multi-QP raises small-verb throughput even when bandwidth is idle)
     qp_switch_us: float = 0.02          # ring a doorbell on a different QP
+    # Degraded mode (failure detection).  A verb posted to a server that is
+    # failing-but-not-yet-declared times out and retries with exponential
+    # backoff; after ``max_retries`` the error surfaces to the caller (and
+    # feeds the controller's missed-probe counter).
+    retry_timeout_us: float = 40.0      # per-attempt verb/probe timeout
+    retry_backoff: float = 2.0          # backoff factor between attempts
+    max_retries: int = 3                # attempts before declaring the verb lost
+
+    def retry_penalty_us(self) -> float:
+        """Total virtual time burned by a full retry ladder (timeout,
+        backoff x2, ...): what a thread pays to discover a dead peer."""
+        return sum(self.retry_timeout_us * self.retry_backoff ** i
+                   for i in range(self.max_retries))
 
     def xfer_us(self, nbytes: int) -> float:
         return nbytes / self.bw_bytes_per_us
@@ -156,6 +185,14 @@ class NetStats:
     speculative_fetches: int = 0        # prefetch doorbells posted off-path
     late_fences: int = 0                # fences deferred to first use
     wasted_prefetches: int = 0          # speculative entries killed unused
+    # Recovery (crash fail-over; all zero on the no-failure path).
+    orphaned_cids: int = 0              # pending verbs disposed at fail-over
+    rehomed_boxes: int = 0              # objects restored from replica/checkpoint
+    broken_locks: int = 0               # DMutex holders broken by fail-over
+    lost_writes: int = 0                # dirty-at-crash objects (epoch revert)
+    suspect_invalidations: int = 0      # dead-home cache copies scrubbed
+    degraded_retries: int = 0           # retry attempts against failing servers
+    recovery_makespan_us: float = 0.0   # virtual time of the last fail-over
 
     def total_msgs(self) -> int:
         return (self.one_sided_reads + self.one_sided_writes
@@ -178,6 +215,7 @@ class _Verb:
     dst: int
     nbytes: int
     done_us: float
+    is_read: bool = False     # speculative READ (vs async write-back WRITE)
 
 
 class IOBatch:
@@ -224,11 +262,11 @@ class IOBatch:
             sim.next_cid()               # every coalesced verb draws a cid
         if is_read:
             net.one_sided_reads += 1
-            sim.servers[server].bytes_out += total
+            sim.servers[sim._serve(server)].bytes_out += total
             sim.servers[th.server].bytes_in += total
         else:
             net.one_sided_writes += 1
-            sim.servers[server].bytes_in += total
+            sim.servers[sim._serve(server)].bytes_in += total
             sim.servers[th.server].bytes_out += total
         net.doorbell_batches += 1
         net.batched_verbs += len(sizes)
@@ -241,6 +279,9 @@ class IOBatch:
         if self.empty:
             return 0.0
         sim, cost = self.sim, self.sim.cost
+        if sim.failed or sim.failing:     # all-or-nothing: gate before counting
+            for server in (*self.reads, *self.writes):
+                sim.check_reachable(th, server)
         if not sim.ooo:                  # legacy plane: PR-1 arithmetic
             issue = 0.0                  # CPU posts every WQE serially
             inflight = 0.0               # doorbells to distinct QPs overlap
@@ -301,6 +342,7 @@ class WritebackQueue:
     def post(self, th, dst_server: int, nbytes: int) -> int:
         """Post an async WRITE; returns its completion id."""
         sim, cost, net = self.sim, self.sim.cost, self.sim.net
+        sim.check_reachable(th, dst_server, sync=False)
         th.t_us += cost.wb_issue_us
         tid = getattr(th, "tid", 0)
         cid = sim.next_cid()
@@ -327,7 +369,7 @@ class WritebackQueue:
         net.one_sided_writes += 1
         net.async_writebacks += 1
         net.bytes_moved += nbytes
-        sim.servers[dst_server].bytes_in += nbytes
+        sim.servers[sim._serve(dst_server)].bytes_in += nbytes
         sim.servers[th.server].bytes_out += nbytes
         return cid
 
@@ -342,6 +384,7 @@ class WritebackQueue:
         plane serializes reads on a per-*source* wire, independent of the
         write-back tails (READs come out of a link, WRITEs go into it)."""
         sim, cost, net = self.sim, self.sim.cost, self.sim.net
+        sim.check_reachable(th, src_server, sync=False)
         th.t_us += cost.wb_issue_us + cost.doorbell_us * (n_verbs - 1)
         tid = getattr(th, "tid", 0)
         cid = sim.next_cid()
@@ -356,13 +399,14 @@ class WritebackQueue:
             if prior_max > done:
                 net.ooo_completions += 1
             self._tid_maxdone[tid] = max(prior_max, done)
-        self._pending[cid] = _Verb(cid, tid, src_server, nbytes, done)
+        self._pending[cid] = _Verb(cid, tid, src_server, nbytes, done,
+                                   is_read=True)
         self._max_cid = cid
         self.posted += 1
         net.one_sided_reads += 1
         net.speculative_fetches += 1
         net.bytes_moved += nbytes
-        sim.servers[src_server].bytes_out += nbytes
+        sim.servers[sim._serve(src_server)].bytes_out += nbytes
         sim.servers[th.server].bytes_in += nbytes
         return cid
 
@@ -458,6 +502,34 @@ class WritebackQueue:
         self.sim._forget_tid(tid)
         return len(mine)
 
+    def dispose_server(self, dead: int, at_us: float) -> list[_Verb]:
+        """Recovery quiesce: every pending verb touching ``dead`` (an async
+        WRITE into it, a speculative READ out of it) can never complete —
+        the RC connection died with the NIC.  Each such verb is *disposed*
+        exactly once: removed from the pending window and retired at
+        ``at_us``, the recovery barrier, so a dependent completion-id fence
+        neither waits forever on a completion that will never arrive nor
+        silently forgets the dependency (it waits until the recovery
+        declared the verb dead — the moment its outcome became known).
+        Verbs posted *by* threads of the dead server to surviving servers
+        are NOT disposed here: their bytes were DMA'd before the crash, so
+        ``forget(tid)`` retires them at their real completion times.
+
+        Returns the disposed verbs (the RecoveryManager records their cids
+        in its exactly-once ledger and routes the speculative READs through
+        the ``spec_log`` invalidation discipline)."""
+        victims = [v for v in self._pending.values() if v.dst == dead]
+        for v in victims:
+            del self._pending[v.cid]
+            self._retire(v.cid, at_us)
+            self._tid_maxdone.pop(v.tid, None)   # recomputed on next post
+        self._bw_tail.pop(dead, None)
+        self._bw_tail_rd.pop(dead, None)
+        if not self._pending:
+            self._bw_tail.clear()
+            self._bw_tail_rd.clear()
+        return victims
+
     def end_epoch(self) -> None:
         """End an observation epoch (``Sim.snapshot()``/``Sim.reset()``):
         clear every per-thread tail — pending verbs, legacy per-destination
@@ -500,12 +572,107 @@ class Sim:
         # straggler model: per-server compute slowdown (thermal throttling,
         # noisy neighbours, failing DIMMs...).  1.0 = healthy.
         self.slowdown = [1.0] * n_servers
+        # Failure state.  ``failing`` = unresponsive but not yet declared:
+        # verbs posted to it burn the degraded-mode retry ladder and raise;
+        # ``failed`` = declared dead by the controller (recovery ran or is
+        # running): verbs raise immediately.  ``degrade`` escalates to
+        # ``mark_failing`` escalates to ``declare_failed``.
+        self.failing: set[int] = set()
+        self.failed: set[int] = set()
+        # ``lost`` = machines whose *compute* is gone forever (the scheduler
+        # and controller never place threads there again).  ``rehosted``
+        # maps a lost server's partition index to the surviving server now
+        # physically serving it (backup promotion): traffic to the index
+        # keeps its addresses but lands on the backup's NIC/CPU.
+        self.lost: set[int] = set()
+        self.rehosted: dict[int, int] = {}
 
     def batch(self) -> IOBatch:
         return IOBatch(self)
 
     def degrade(self, server: int, factor: float) -> None:
+        """Slow-but-alive straggler (verbs still complete).  A server that
+        stops answering entirely escalates to ``mark_failing`` (verbs burn
+        the retry ladder) and finally ``declare_failed`` (fail-over ran)."""
         self.slowdown[server] = factor
+
+    # ---- failure / elasticity -----------------------------------------
+    def mark_failing(self, server: int) -> None:
+        """The server stopped responding (crash suspected, not declared):
+        synchronous verbs to it now time out through the retry/backoff
+        ladder; async posts still enqueue (the NIC accepts the WQE — the
+        verb becomes an orphan the recovery quiesce disposes)."""
+        if server in self.failed:
+            return
+        self.failing.add(server)
+
+    def declare_failed(self, server: int) -> None:
+        """Controller declared the failure: every subsequent verb to the
+        server raises ``ServerLostError`` immediately (no retry ladder) —
+        until ``rehost`` remaps the partition onto its promoted backup."""
+        self.failing.discard(server)
+        self.failed.add(server)
+        self.lost.add(server)
+
+    def rehost(self, dead: int, backup: int) -> None:
+        """Backup promotion completed: the dead server's partition index is
+        served by ``backup`` from now on — verbs to it succeed again, and
+        their NIC/CPU occupancy is charged to the backup's stats (that is
+        the promoted replica absorbing the dead server's traffic).  The
+        dead machine's *compute* stays lost."""
+        self.rehosted[dead] = backup
+        self.failed.discard(dead)
+
+    def _serve(self, server: int) -> int:
+        """Physical server currently serving a partition index (follows
+        rehost chains — a promoted backup may itself have died later)."""
+        while server in self.rehosted:
+            server = self.rehosted[server]
+        return server
+
+    def alive_servers(self) -> list[int]:
+        return [s for s in range(self.n) if s not in self.lost]
+
+    def check_reachable(self, th, server: int, sync: bool = True) -> None:
+        """Reachability gate charged before a verb to ``server``.  Declared
+        failures raise immediately.  For a failing-but-undeclared server, a
+        *synchronous* verb burns the full retry ladder on the caller's
+        clock before raising (that latency is how the caller — and through
+        it the controller's probe loop — learns the peer is gone); an
+        *async* post (``sync=False``) is accepted by the local NIC and
+        raises nothing — the verb simply never completes and is disposed
+        as an orphan by the recovery quiesce."""
+        if not (self.failed or self.failing):
+            return
+        if server in self.failed:
+            raise ServerLostError(server, "declared failed; verb rejected")
+        if sync and server in self.failing:
+            pen = self.cost.retry_penalty_us()
+            th.t_us += pen
+            self.servers[th.server].cpu_busy_us += pen
+            self.net.degraded_retries += self.cost.max_retries
+            raise ServerLostError(
+                server, f"unresponsive after {self.cost.max_retries} retries")
+
+    def add_server(self) -> int:
+        """Elastic grow: append a fresh server to the cluster (stats,
+        slowdown, link accounting) and restripe the QP plane.  Returns the
+        new server index.  The heap partition / cache / replica extension
+        is the cluster layer's job (``Cluster.add_server``)."""
+        s = self.n
+        self.n += 1
+        self.servers.append(ServerStats())
+        self.slowdown.append(1.0)
+        self.restripe()
+        return s
+
+    def restripe(self) -> None:
+        """The server set changed (shrink or grow): every thread's RC
+        connections are re-established against the new membership, so the
+        per-thread QP rings/tails/CQ state are dropped.  Accumulated
+        link/cpu occupancy is kept — it is history that already happened
+        and still floors the makespan."""
+        self._clear_qp_state()
 
     # ---- completion plane primitives -----------------------------------
     def next_cid(self) -> int:
@@ -563,7 +730,7 @@ class Sim:
         thread still in the link's idle past.)  Only the ``ooo=True``
         congestion model calls this; the caller guards."""
         us = self.cost.link_xfer_us(nbytes)
-        self.servers[server].link_busy_us += us
+        self.servers[self._serve(server)].link_busy_us += us
         return start_us + us
 
     def _forget_tid(self, tid: int) -> None:
@@ -599,26 +766,29 @@ class Sim:
 
     def rdma_read(self, th, src_server: int, nbytes: int) -> None:
         """One-sided READ: no CPU on the remote side."""
+        self.check_reachable(th, src_server)
         self.next_cid()
         th.t_us = (self.wire_done(th.t_us, src_server, nbytes)
                    + self.cost.one_sided_base_us)
         self.net.one_sided_reads += 1
         self.net.bytes_moved += nbytes
         self.net.round_trips += 1
-        self.servers[src_server].bytes_out += nbytes
+        self.servers[self._serve(src_server)].bytes_out += nbytes
         self.servers[th.server].bytes_in += nbytes
 
     def rdma_write(self, th, dst_server: int, nbytes: int) -> None:
+        self.check_reachable(th, dst_server)
         self.next_cid()
         th.t_us = (self.wire_done(th.t_us, dst_server, nbytes)
                    + self.cost.one_sided_base_us)
         self.net.one_sided_writes += 1
         self.net.bytes_moved += nbytes
         self.net.round_trips += 1
-        self.servers[dst_server].bytes_in += nbytes
+        self.servers[self._serve(dst_server)].bytes_in += nbytes
         self.servers[th.server].bytes_out += nbytes
 
     def rdma_atomic(self, th, dst_server: int) -> None:
+        self.check_reachable(th, dst_server)
         self.next_cid()
         th.t_us += self.cost.atomic_verb_us
         self.net.atomics += 1
@@ -627,6 +797,7 @@ class Sim:
     def rpc(self, th, dst_server: int, req_bytes: int = 64,
             resp_bytes: int = 64, proc_us: float | None = None) -> None:
         """Two-sided request/response; remote CPU does ``proc_us`` of work."""
+        self.check_reachable(th, dst_server)
         proc = self.cost.msg_proc_us if proc_us is None else proc_us
         us = (self.cost.two_sided_rtt_us + self.cost.xfer_us(req_bytes + resp_bytes)
               + proc)
@@ -634,15 +805,19 @@ class Sim:
         self.net.two_sided_msgs += 2
         self.net.round_trips += 1
         self.net.bytes_moved += req_bytes + resp_bytes
-        self.servers[dst_server].cpu_busy_us += proc
-        self.servers[dst_server].msgs += 1
+        serve = self._serve(dst_server)
+        self.servers[serve].cpu_busy_us += proc
+        self.servers[serve].msgs += 1
 
     def async_msg(self, dst_server: int, nbytes: int = 64) -> None:
         """Off-critical-path message (e.g. async dealloc, lazy invalidation)."""
+        if dst_server in self.failed:
+            return                       # dropped on the floor: nobody listens
         self.net.async_msgs += 1
         self.net.bytes_moved += nbytes
-        self.servers[dst_server].cpu_busy_us += self.cost.msg_proc_us * 0.5
-        self.servers[dst_server].msgs += 1
+        serve = self._serve(dst_server)
+        self.servers[serve].cpu_busy_us += self.cost.msg_proc_us * 0.5
+        self.servers[serve].msgs += 1
 
     # ---- aggregation ----------------------------------------------------
     def makespan_us(self, threads) -> float:

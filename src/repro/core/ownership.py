@@ -75,7 +75,7 @@ from typing import Any, Callable
 from . import addr as A
 from .cache import LocalCache
 from .heap import GlobalHeap, Obj
-from .net import Sim
+from .net import ServerLostError, Sim
 from .protocol import (BorrowError, ProtocolBackend, ReadGuard, WriteGuard,
                        register_backend)
 
@@ -113,7 +113,8 @@ class DBox:
     """Owner pointer (DRust's ``DBox<T>``, re-implemented ``Box``)."""
 
     __slots__ = ("g", "l", "u", "home", "rt", "live_refs", "live_mut",
-                 "dropped", "tied", "wb_cids", "fetch_cid", "fetch_server")
+                 "dropped", "tied", "wb_cids", "fetch_cid", "fetch_server",
+                 "lost", "mut_broken", "mut_tid", "ref_tids")
 
     def __init__(self, rt: "DrustRuntime", g: int, home: int, tied: bool = False):
         self.rt = rt
@@ -128,6 +129,13 @@ class DBox:
         self.wb_cids: list[int] = []   # in-flight write-back completion ids
         self.fetch_cid = 0             # in-flight speculative prefetch cid
         self.fetch_server: int | None = None   # server that prefetched
+        # Recovery state (all no-ops on the no-failure path).
+        self.lost = False        # payload died unrecoverably with its server
+        self.mut_broken = False  # open WriteGuard's home died: the pending
+        #   mutation can never be written back — the guard surfaces
+        #   ServerLostError and releases without write-back
+        self.mut_tid: int | None = None   # tid holding the mutable borrow
+        self.ref_tids: dict[int, int] = {}  # tid -> live read borrows held
 
     def __repr__(self):
         return (f"DBox(g={A.clear_color(self.g):#x}c{A.get_color(self.g)}, "
@@ -149,8 +157,10 @@ class DBox:
         if self.live_mut:
             raise BorrowError("immutable borrow while mutable borrow alive")
         self.live_refs += 1
+        tid = getattr(th, "tid", 0)
+        self.ref_tids[tid] = self.ref_tids.get(tid, 0) + 1
         self.u = False                      # B.4: creating & ref resets U
-        return Ref(self.rt, self.g, owner=self)
+        return Ref(self.rt, self.g, owner=self, tid=tid)
 
     def borrow_mut(self, th) -> "MutRef":
         self._check_live()
@@ -160,11 +170,16 @@ class DBox:
         self.rt._invalidate_prefetch(self)  # speculative bytes go stale
         self._release_pin()                 # owner's cached copy unpinned
         self.live_mut = True
+        self.mut_tid = getattr(th, "tid", 0)
         return MutRef(self.rt, self.g, owner=self, u=self.u)
 
     def _check_live(self):
         if self.dropped:
             raise BorrowError("use after drop")
+        if self.lost:
+            raise ServerLostError(
+                A.server_of(self.g),
+                "object lost with its home server (no replica to restore)")
 
     def _release_pin(self):
         if self.l != A.NULL:
@@ -175,20 +190,24 @@ class DBox:
 class Ref:
     """Shared immutable reference (``&T``)."""
 
-    __slots__ = ("rt", "g", "l", "owner", "dropped")
+    __slots__ = ("rt", "g", "l", "owner", "dropped", "tid")
 
-    def __init__(self, rt: "DrustRuntime", g: int, owner: DBox | None):
+    def __init__(self, rt: "DrustRuntime", g: int, owner: DBox | None,
+                 tid: int = 0):
         self.rt = rt
         self.g = g          # colored global address, copied at creation (D.2)
         self.l = A.NULL     # local copy address (filled on first deref)
         self.owner = owner
         self.dropped = False
+        self.tid = tid      # borrower thread (recovery releases dead holders)
 
     def clone(self) -> "Ref":
         """New ref from a ref: copies only the global address (D.2)."""
         if self.owner is not None:
             self.owner.live_refs += 1
-        return Ref(self.rt, self.g, self.owner)
+            tids = self.owner.ref_tids
+            tids[self.tid] = tids.get(self.tid, 0) + 1
+        return Ref(self.rt, self.g, self.owner, tid=self.tid)
 
     def deref(self, th) -> Any:
         """Algorithm 4."""
@@ -222,6 +241,12 @@ class Ref:
             self.l = A.NULL
         if self.owner is not None:
             self.owner.live_refs -= 1
+            tids = self.owner.ref_tids
+            left = tids.get(self.tid, 0) - 1
+            if left > 0:
+                tids[self.tid] = left
+            else:
+                tids.pop(self.tid, None)
 
 
 class MutRef:
@@ -240,6 +265,10 @@ class MutRef:
     def deref_mut(self, th) -> Any:
         """Algorithm 6: returns the payload at a local, writable address."""
         assert not self.dropped
+        if self.owner.mut_broken:
+            raise ServerLostError(
+                A.server_of(self.owner.g),
+                "mutable borrow broken: the object's home server failed")
         rt, sim = self.rt, self.rt.sim
         sim.deref_check(th)
         self.accessed = True
@@ -279,6 +308,20 @@ class MutRef:
             return
         self.dropped = True
         rt, owner = self.rt, self.owner
+        if owner.mut_broken:
+            # Guard-aware fail-over: the object's home died while this
+            # mutable borrow was open.  The pending mutation can never be
+            # written back (the restored replica reverts to the last flushed
+            # epoch) — release the borrow WITHOUT posting a write-back and
+            # without committing the speculative colored address, then
+            # surface the loss structurally.
+            owner.mut_broken = False
+            owner.live_mut = False
+            owner.mut_tid = None
+            raise ServerLostError(
+                A.server_of(owner.g),
+                "write-back impossible: home server failed mid-mutation "
+                "(un-flushed write lost, reverted to last flushed epoch)")
         if owner.home != th.server:
             if rt.batch_io:
                 owner.wb_cids.append(
@@ -291,6 +334,7 @@ class MutRef:
         owner.u = self.u
         owner.l = A.NULL       # stale read-path ext cannot survive a new g
         owner.live_mut = False
+        owner.mut_tid = None
         if self.accessed:
             rt.on_write_visible(A.clear_color(self.g))       # FT write-back hook
 
@@ -376,6 +420,7 @@ class DrustRuntime(ProtocolBackend):
         self.on_alloc: Callable[[int], None] = lambda raw: None
         self.on_free: Callable[[int], None] = lambda raw: None
         self.on_transfer: Callable[[int], None] = lambda raw: None
+        self.on_move: Callable[[int, int], None] = lambda old, new: None
         # Deref coalescer (installed by Cluster under ``coalesce="auto"``);
         # None = every deref fetches eagerly (the manual plane).
         self.coalescer = None
@@ -912,6 +957,11 @@ class DrustRuntime(ProtocolBackend):
             new_obj.ties = [remap.get(t, t) for t in old.ties]
         for a in group:
             self.heap.free(a)
+            # the data no longer lives at `a`: FT state keyed by the old
+            # address must follow the object, or a later crash of the source
+            # server would "restore" a stale replica at a freed (possibly
+            # reused) address
+            self.on_move(a, remap[a])
             owner = self.owner_of.pop(a, None)
             color = self.obj_color.pop(a, 0)
             self.owner_of[remap[a]] = owner
@@ -942,6 +992,7 @@ class DrustRuntime(ProtocolBackend):
         new_obj = part.get(new_raw)
         new_obj.ties = list(obj.ties)
         part.free(raw)
+        self.on_move(raw, new_raw)  # FT state must not outlive the address
         owner = self.owner_of.pop(raw, None)
         self.owner_of[new_raw] = owner
         self.obj_color.pop(raw, None)

@@ -155,10 +155,12 @@ class GlobalController:
 
     MEM_HI = 0.90
     CPU_HI = 0.90
+    PROBE_MISS_LIMIT = 3      # missed liveness probes before declaring death
 
     def __init__(self, cluster: "Cluster"):
         self.cluster = cluster
         self.thread_table: dict[int, int] = {}     # tid -> server
+        self.missed_probes: dict[int, int] = {}    # server -> misses in a row
         self._rr = 0
 
     # -- probing ----------------------------------------------------------
@@ -171,19 +173,51 @@ class GlobalController:
         sim = self.cluster.sim
         return sim.servers[s].cpu_busy_us / (sim.cores * horizon_us)
 
+    def probe_failures(self, th) -> list[int]:
+        """One liveness-probe round of the controller daemon: every
+        unresponsive (``failing``) server costs the prober one probe
+        timeout and bumps its miss counter; at ``PROBE_MISS_LIMIT`` the
+        failure is *declared* and recovery fails the server over.  Returns
+        the servers declared dead this round."""
+        cl = self.cluster
+        sim = cl.sim
+        declared: list[int] = []
+        for s in sorted(sim.failing):
+            sim.busy(th, sim.cost.retry_timeout_us)    # the probe timed out
+            sim.net.degraded_retries += 1
+            self.missed_probes[s] = self.missed_probes.get(s, 0) + 1
+            if self.missed_probes[s] >= self.PROBE_MISS_LIMIT:
+                self.missed_probes.pop(s)
+                declared.append(s)
+                if getattr(cl, "recovery", None) is not None:
+                    cl.recovery.fail_over(s, th)
+                else:
+                    sim.declare_failed(s)
+        # a server that answers again clears its strike counter
+        for s in list(self.missed_probes):
+            if s not in sim.failing:
+                self.missed_probes.pop(s)
+        return declared
+
     # -- placement policies -------------------------------------------------
+    def _alive(self) -> list[int]:
+        return self.cluster.sim.alive_servers()
+
     def pick_alloc_server(self, prefer: int, size: int) -> int:
-        """Local-first; under pressure, the most vacant server (§4.2.1)."""
+        """Local-first; under pressure, the most vacant *alive* server
+        (§4.2.1).  Lost servers' partition indices are rehosted read-mostly
+        — new allocations never land there."""
         part = self.cluster.heap.partitions[prefer]
         if (part.used + size) / part.capacity < self.MEM_HI:
             return prefer
-        return min(range(self.cluster.sim.n), key=self.mem_frac)
+        return min(self._alive(), key=self.mem_frac)
 
     def pick_spawn_server(self) -> int:
-        """Least-loaded by CPU busy; round-robin tiebreak."""
+        """Least-loaded alive server by CPU busy; round-robin tiebreak."""
         sim = self.cluster.sim
-        lo = min(s.cpu_busy_us for s in sim.servers)
-        cands = [i for i, s in enumerate(sim.servers) if s.cpu_busy_us == lo]
+        alive = self._alive()
+        lo = min(sim.servers[s].cpu_busy_us for s in alive)
+        cands = [s for s in alive if sim.servers[s].cpu_busy_us == lo]
         self._rr += 1
         return cands[self._rr % len(cands)]
 
@@ -193,10 +227,11 @@ class GlobalController:
     def detect_stragglers(self) -> list[int]:
         """Servers whose observed compute rate lags the fleet median by
         more than STRAGGLER_FACTOR (the controller's periodic probe)."""
+        alive = self._alive()
         slow = self.cluster.sim.slowdown
-        med = sorted(slow)[len(slow) // 2]
-        return [s for s, f in enumerate(slow)
-                if f > med * self.STRAGGLER_FACTOR]
+        rates = sorted(slow[s] for s in alive)
+        med = rates[len(rates) // 2]
+        return [s for s in alive if slow[s] > med * self.STRAGGLER_FACTOR]
 
     def mitigate_stragglers(self) -> int:
         """Drain threads off straggling servers onto the fastest peers —
@@ -206,8 +241,7 @@ class GlobalController:
         stragglers = set(self.detect_stragglers())
         if not stragglers:
             return 0
-        healthy = [s for s in range(self.cluster.sim.n)
-                   if s not in stragglers]
+        healthy = [s for s in self._alive() if s not in stragglers]
         if not healthy:
             return 0
         for t in list(self.cluster.scheduler.threads):
@@ -223,7 +257,8 @@ class GlobalController:
         """One balancing round; returns number of migrations performed."""
         cl, moved = self.cluster, 0
         threads = [t for t in cl.scheduler.threads if not t.done]
-        for s in range(cl.sim.n):
+        alive = self._alive()
+        for s in alive:
             if self.mem_frac(s) > self.MEM_HI:
                 if cl.backend_drust:
                     # incremental CLOCK eviction toward the watermark — only
@@ -235,7 +270,7 @@ class GlobalController:
                 victims = sorted((t for t in threads if t.server == s),
                                  key=lambda t: -t.local_heap_bytes)
                 if victims and self.mem_frac(s) > self.MEM_HI:
-                    dst = min(range(cl.sim.n), key=self.mem_frac)
+                    dst = min(alive, key=self.mem_frac)
                     if dst != s:
                         cl.scheduler.migrate(victims[0], dst)
                         moved += 1
@@ -245,10 +280,10 @@ class GlobalController:
                     key=lambda t: -sum(t.remote_accesses.values()))
                 for t in remote_heavy[:1]:
                     dst = t.hottest_remote()
-                    if dst is None:
+                    if dst is None or dst not in alive:
                         continue
                     if self.cpu_frac(dst, horizon_us) > self.CPU_HI:
-                        dst = min(range(cl.sim.n),
+                        dst = min(alive,
                                   key=lambda x: self.cpu_frac(x, horizon_us))
                     if dst != s:
                         cl.scheduler.migrate(t, dst)
@@ -415,6 +450,26 @@ class DerefCoalescer:
         self.flushed_derefs += len(items)
         return len(items)
 
+    def discard(self, th) -> int:
+        """``th`` died mid-quantum (its server crashed): its registered
+        derefs can never materialize — no doorbell may be posted from a
+        dead server — so the registration borrows release *without* a
+        ``read_many``.  Returns the number of derefs discarded."""
+        ent = self.pending.pop(th.tid, None)
+        self.pending_bytes.pop(th.tid, None)
+        self.first_reg_t.pop(th.tid, None)
+        if not ent:
+            return 0
+        _, items = ent
+        for box, ref in items:
+            tids = self.by_box.get(box)
+            if tids is not None:
+                tids.discard(th.tid)
+                if not tids:
+                    self.by_box.pop(box, None)
+            ref.drop(th)         # registration never deref'd: no cache pin
+        return len(items)
+
     def flush_box(self, box) -> None:
         """A mutable op is about to touch ``box``: close the quantum of
         every thread holding a registered deref on it (sorted by tid —
@@ -448,9 +503,11 @@ class Cluster:
         self.sim = Sim(n_servers, cores_per_server, cost,
                        qps_per_thread=qps_per_thread, ooo=ooo)
         self.heap = GlobalHeap(n_servers, partition_bytes)
+        self.partition_bytes = partition_bytes  # for elastic add_server
         self.backend_name = backend
         self.batch_io = batch_io
         self.channels: list = []               # auto mode: quantum-settled
+        self.mutexes: list = []                # recovery: lock reconstruction
         # Every protocol engine implements the ProtocolBackend ABC and is
         # constructed uniformly from the registry; capability flags
         # (supports_*) replace backend-name special cases downstream.
@@ -471,6 +528,33 @@ class Cluster:
         if replicate and backend == "drust":
             from .fault import Replicator
             self.replicator = Replicator(self)
+        # Crash fail-over pipeline (drust only: it reconciles ownership
+        # state — borrows, guards, spec cids — the baselines don't track).
+        self.recovery = None
+        if self.backend_drust:
+            from .fault import RecoveryManager
+            self.recovery = RecoveryManager(self)
+
+    # elasticity ----------------------------------------------------------
+    def add_server(self) -> int:
+        """Elastic grow: a fresh server joins the live cluster — Sim stats
+        + QP restripe, a new heap partition (the PGAS address space already
+        reserves its range), an empty cache wired into the spec-disposition
+        ledger, and a replica map if replication is on.  Returns the new
+        server index.  Only the drust backend supports growing (the
+        baselines size per-server state once, at construction)."""
+        if not self.backend_drust:
+            raise RuntimeError("elastic grow requires the drust backend")
+        s = self.sim.add_server()
+        part = self.heap.add_partition(self.partition_bytes)
+        from .cache import LocalCache
+        H = LocalCache(s, part)
+        H.on_spec_drop = (
+            lambda cid: self.drust._dispose_spec(cid, "invalidated"))
+        self.drust.caches.append(H)
+        if self.replicator is not None:
+            self.replicator.add_server(s)
+        return s
 
     # convenience ---------------------------------------------------------
     def main_thread(self, server: int = 0) -> Thread:

@@ -80,8 +80,15 @@ class DMutex:
         self.h = self.backend.alloc(th, size, value)
         self.home = A.server_of(self.h.g if hasattr(self.h, "g") else self.h.raw)
         self._release_t = 0.0          # serialization clock (virtual time)
+        self._holder = None            # thread inside the critical section
         self.acquisitions = 0
         self.contended = 0
+        self.broken = 0                # times recovery broke this lock
+        # Recovery needs to find every live mutex to reconstruct lock state
+        # after a crash (break locks whose holder or home died).
+        registry = getattr(cluster, "mutexes", None)
+        if registry is not None:
+            registry.append(self)
 
     def _lock_verb(self, th) -> None:
         sim = self.cluster.sim
@@ -95,6 +102,16 @@ class DMutex:
         else:
             sim.rpc(th, self.home, proc_us=sim.cost.delegation_proc_us)
 
+    def break_lock(self, at_us: float) -> None:
+        """Recovery lock-state reconstruction: the holder (or the home
+        server's lock word) died.  Force-release so later acquirers
+        serialize behind the recovery barrier instead of a dead holder —
+        the critical section's un-flushed effects follow the epoch-revert
+        contract (lost, reported, never resurrected)."""
+        self._holder = None
+        self._release_t = max(self._release_t, at_us)
+        self.broken += 1
+
     def with_lock(self, th, fn: Callable[[Any], Any]) -> Any:
         """Acquire, run the critical section at the caller, release.
 
@@ -106,6 +123,7 @@ class DMutex:
         if th.t_us < self._release_t:                    # wait for holder
             self.contended += 1
             th.t_us = self._release_t
+        self._holder = th
         raw = A.clear_color(self.h.g) if hasattr(self.h, "g") else self.h.raw
         obj = self.cluster.heap.get(raw)
         try:
@@ -114,7 +132,11 @@ class DMutex:
             # A raising critical section still unlocks — otherwise every
             # later acquirer would serialize behind a lock nobody holds
             # (the unbalanced-release analogue of an unbalanced drop).
-            self._release_t = th.t_us                    # section end
+            # If recovery broke the lock mid-section (holder declared dead),
+            # the release already happened during lock-state reconstruction.
+            if self._holder is th:
+                self._holder = None
+            self._release_t = max(self._release_t, th.t_us)  # section end
             # Release: DRust posts a one-sided WRITE (fire-and-forget
             # unlock); GAM posts its release message without waiting for
             # the ack; Grappa's delegated unlock is a blocking global-

@@ -1,0 +1,245 @@
+"""Crash-consistency property suite: server failure at ANY schedule point.
+
+Random schedules interleave reads, writes (local and moving), epoch
+flushes, int8 checkpoints, speculative prefetch, ownership transfer, and
+drops over a small box population spread across 4 servers; then a server
+is crashed at an arbitrary step and failed over.  After recovery the
+invariants below must hold:
+
+  * Epoch-Revert, Never-Resurrect: a box homed on the dead server reads
+    back exactly its last *flushed* version (falling back to the last
+    int8 checkpoint, else it is ``lost`` and raises ``ServerLostError``)
+    — never a dirty pre-crash version served from a warm cache, and never
+    a stale replica at a moved-away address.  Boxes homed on survivors
+    read their current version.
+  * Exactly-Once Disposition: every completion id orphaned by the crash
+    is disposed exactly once — the ``RecoveryManager`` ledger raises on a
+    double disposition, disposed cids are gone from the completion plane,
+    and every speculative cid in ``spec_log`` is ``fenced`` or
+    ``invalidated`` (the PR-4 discipline survives fail-over).
+  * No Leaked State: after recovery no box carries a live borrow (dead
+    threads' borrows were force-released through the per-tid ledger), the
+    surviving boxes accept fresh writes and drops, and the completion
+    plane fully drains.
+
+Each property runs twice: hypothesis-generated (200 examples, crash point
+drawn per schedule, derandomized under the CI profile) and a seeded
+deterministic twin that crashes EVERY schedule at EVERY step (200
+schedules x every prefix), so the full crash lattice is exercised even
+without hypothesis.
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from _hypcompat import given, settings, st
+
+from repro.core import Cluster, ServerLostError, addr as A
+
+N_SERVERS = 4
+N_BOXES = 6
+
+KINDS = ["read", "read", "write", "write", "flush", "checkpoint",
+         "prefetch", "transfer", "drop"]
+
+LOST = object()          # oracle marker: no replica, no checkpoint
+
+
+def _make(qps: int = 2, ooo: bool = True):
+    cl = Cluster(N_SERVERS, backend="drust", replicate=True,
+                 qps_per_thread=qps, ooo=ooo)
+    ths = []
+    for s in range(N_SERVERS):
+        th = cl.main_thread(0)
+        th.server = s
+        ths.append(th)
+    return cl, ths
+
+
+def run_crash_schedule(ops, dead: int, crash_at: int,
+                       qps: int = 2, ooo: bool = True) -> None:
+    """Apply ``ops[:crash_at]``, crash ``dead``, fail over, and audit every
+    crash-consistency invariant (module docstring)."""
+    cl, ths = _make(qps, ooo)
+    rt = cl.drust
+    boxes = [cl.backend.alloc(ths[i % N_SERVERS], 256, ("v", i, 0),
+                              server=i % N_SERVERS)
+             for i in range(N_BOXES)]
+    cur = [0] * N_BOXES               # latest version
+    flushed = [None] * N_BOXES        # last version in the replica map
+    ckpt = [None] * N_BOXES           # last version in the int8 checkpoint
+
+    for kind, t, o, p in ops[:crash_at]:
+        th, i = ths[t % N_SERVERS], o % N_BOXES
+        box = boxes[i]
+        if box.dropped:
+            continue
+        if kind == "read":
+            assert cl.backend.read(th, box) == ("v", i, cur[i])
+        elif kind == "write":
+            raw_before = A.clear_color(box.g)
+            cur[i] += 1
+            cl.backend.write(th, box, ("v", i, cur[i]))
+            if A.clear_color(box.g) != raw_before:
+                # remote write moved the object: the replica followed
+                # (flushed version still restorable) but the checkpoint
+                # entry stays behind in the old partition's image
+                ckpt[i] = None
+        elif kind == "flush":
+            cl.replicator.flush_epoch()
+            for j, b in enumerate(boxes):
+                if not b.dropped:
+                    flushed[j] = cur[j]
+        elif kind == "checkpoint":
+            cl.replicator.checkpoint_epoch()
+            for j, b in enumerate(boxes):
+                if not b.dropped:
+                    ckpt[j] = cur[j]
+        elif kind == "prefetch":
+            rt.prefetch(th, [box])
+        elif kind == "transfer":
+            rt.transfer(th, box, p % N_SERVERS)   # visibility point: flushes
+            flushed[i] = cur[i]
+        elif kind == "drop":
+            rt.drop_box(th, box)
+
+    # ---- the crash, at this exact schedule point ------------------------
+    driver = ths[(dead + 1) % N_SERVERS]
+    cl.recovery.crash(dead)
+    report = cl.recovery.fail_over(dead, driver)
+    assert report.server == dead and report.makespan_us >= 0.0
+
+    # ---- epoch-revert / never-resurrect ---------------------------------
+    for i, box in enumerate(boxes):
+        if box.dropped:
+            continue
+        home = A.server_of(A.clear_color(box.g))
+        if home == dead:
+            expect = (flushed[i] if flushed[i] is not None
+                      else ckpt[i] if ckpt[i] is not None else LOST)
+        else:
+            expect = cur[i]
+        if expect is LOST:
+            assert box.lost
+            with pytest.raises(ServerLostError):
+                cl.backend.read(driver, box)
+        else:
+            assert cl.backend.read(driver, box) == ("v", i, expect), \
+                f"box {i} (home {home}, dead {dead}): wrong epoch served"
+
+    # ---- exactly-once disposition ---------------------------------------
+    # (a double disposition raises inside fail_over; audit the residue)
+    assert not (set(cl.recovery.disposed) & set(cl.sim.wb._pending)), \
+        "a disposed cid is still on the completion plane"
+    assert len(rt.spec_cids) == len(set(rt.spec_cids))
+    for how in rt.spec_log.values():
+        assert how in ("fenced", "invalidated")
+
+    # ---- no leaked borrows / locks; survivors stay fully usable ---------
+    for i, box in enumerate(boxes):
+        if box.dropped:
+            continue
+        assert box.live_refs == 0 and not box.ref_tids, "leaked read borrow"
+        assert not box.live_mut and box.mut_tid is None, "leaked write borrow"
+        if not box.lost:
+            cur[i] += 1
+            cl.backend.write(driver, box, ("v", i, cur[i]))
+            assert cl.backend.read(driver, box) == ("v", i, cur[i])
+            rt.drop_box(driver, box)
+            assert box.dropped
+    cl.sim.wb.fence_all(driver)
+    assert not cl.sim.wb._pending, "completion plane leaked pending verbs"
+
+
+crash_ops = st.lists(
+    st.tuples(st.sampled_from(KINDS),
+              st.integers(0, N_SERVERS - 1),
+              st.integers(0, N_BOXES - 1),
+              st.integers(0, N_SERVERS - 1)),
+    min_size=0, max_size=10)
+
+
+@settings(max_examples=200, deadline=None)
+@given(crash_ops, st.integers(0, N_SERVERS - 1), st.integers(0, 10),
+       st.sampled_from([1, 2]), st.booleans())
+def test_crash_at_any_point_property(ops, dead, crash_at, qps, ooo):
+    run_crash_schedule(ops, dead, min(crash_at, len(ops)), qps, ooo)
+
+
+def test_crash_at_every_point_200_seeded_schedules():
+    """Deterministic twin: 200 seeded schedules, each crashed at EVERY
+    prefix (including before the first op), so the whole crash lattice is
+    covered even without hypothesis."""
+    rng = random.Random(11)
+    for _ in range(200):
+        qps = rng.choice([1, 2])
+        ooo = rng.random() < 0.5
+        dead = rng.randrange(N_SERVERS)
+        ops = [(rng.choice(KINDS), rng.randrange(N_SERVERS),
+                rng.randrange(N_BOXES), rng.randrange(N_SERVERS))
+               for _ in range(rng.randint(0, 10))]
+        for k in range(len(ops) + 1):
+            run_crash_schedule(ops, dead, k, qps, ooo)
+
+
+def test_no_failure_path_is_undisturbed():
+    """Control: the same machinery with zero failures — every box reads its
+    current version, no recovery counters move, the plane drains."""
+    rng = random.Random(7)
+    cl, ths = _make()
+    rt = cl.drust
+    boxes = [cl.backend.alloc(ths[i % N_SERVERS], 256, ("v", i, 0),
+                              server=i % N_SERVERS) for i in range(N_BOXES)]
+    cur = [0] * N_BOXES
+    for _ in range(60):
+        i = rng.randrange(N_BOXES)
+        th = ths[rng.randrange(N_SERVERS)]
+        if rng.random() < 0.5:
+            cur[i] += 1
+            cl.backend.write(th, boxes[i], ("v", i, cur[i]))
+        else:
+            assert cl.backend.read(th, boxes[i]) == ("v", i, cur[i])
+        if rng.random() < 0.2:
+            cl.replicator.flush_epoch()
+    net = cl.sim.net
+    assert net.orphaned_cids == 0 and net.rehomed_boxes == 0
+    assert net.lost_writes == 0 and net.broken_locks == 0
+    assert net.suspect_invalidations == 0 and net.degraded_retries == 0
+    assert net.recovery_makespan_us == 0.0
+    assert not cl.recovery.disposed and not cl.recovery.reports
+    cl.sim.wb.fence_all(ths[0])
+    assert not cl.sim.wb._pending
+
+
+def test_double_disposition_raises():
+    """The recovery ledger is the exactly-once authority: feeding it the
+    same cid twice is a protocol bug and must raise, not double-count."""
+    cl, _ = _make()
+    cl.recovery._dispose(42, "orphaned-write")
+    with pytest.raises(RuntimeError):
+        cl.recovery._dispose(42, "orphaned-read")
+
+
+def test_makespan_scales_with_working_set_not_cluster_size():
+    """The recovery SLO: fail-over cost is dominated by streaming the dead
+    server's working set — growing the CLUSTER at fixed working set moves
+    the makespan far less than growing the WORKING SET at fixed cluster."""
+    def makespan(n_servers: int, n_boxes: int, size: int = 4096) -> float:
+        cl = Cluster(n_servers, backend="drust", replicate=True)
+        th0 = cl.main_thread(0)
+        t1 = cl.main_thread(0); t1.server = 1
+        for _ in range(n_boxes):
+            cl.backend.alloc(t1, size, b"x" * size, server=1)
+        cl.replicator.flush_epoch()
+        rep = cl.recovery.fail_and_recover(1, th0)
+        assert rep.restored_bytes == n_boxes * size
+        return rep.makespan_us
+
+    base = makespan(4, 16)
+    wide = makespan(16, 16)          # 4x the servers, same working set
+    heavy = makespan(4, 256)         # same servers, 16x the working set
+    assert heavy > 4 * base          # working set dominates ...
+    assert wide < 4 * base           # ... cluster size barely registers

@@ -1,10 +1,13 @@
 """Runtime layer: scheduler/migration, controller policies, channels,
-shared-state sync, and fault tolerance (replication + promotion)."""
+shared-state sync, and fault tolerance (replication + promotion +
+crash-consistent fail-over)."""
 
 import numpy as np
 import pytest
 
-from repro.core import (Channel, Cluster, DAtomic, DMutex, addr as A)
+from repro.core import (Channel, Cluster, DAtomic, DMutex, ServerLostError,
+                        addr as A)
+from repro.core.fault import Replicator
 
 
 def test_spawn_and_spawn_to():
@@ -170,6 +173,255 @@ def test_snapshot_ends_epoch_and_clears_writeback_tails():
     cl.sim.reset()
     assert cl.sim.wb.pending_completion_us == 0.0
     assert cl.sim.net.async_writebacks == 0
+
+
+# --------------------------------------------------------------------------
+#  Replicator regressions (promote sizing, hook chaining, cache quarantine)
+# --------------------------------------------------------------------------
+def test_promote_restores_exact_sizes():
+    """Regression: promote must restore each object with the size captured
+    at flush time.  Recomputing it at promote time drifts for payloads with
+    no intrinsic byte measure (a list allocated as 1000 bytes re-measures
+    as the 64-byte default), corrupting ``partition.used`` accounting."""
+    cl = Cluster(3, backend="drust", replicate=True)
+    t1 = cl.main_thread(0); t1.server = 1
+    box = cl.backend.alloc(t1, 1000, list(range(10)), server=1)
+    cl.replicator.flush_epoch()
+    part = cl.heap.partitions[1]
+    used_before = part.used
+    cl.replicator.fail(1)
+    assert part.used == 0
+    cl.replicator.promote(1)
+    assert part.used == used_before
+    assert part.get(A.clear_color(box.g)).size == 1000
+
+
+def test_replicator_chains_hooks_and_rejects_second():
+    """Regression: attaching the replicator must CHAIN the runtime's FT
+    hooks (a pre-installed observer keeps firing), not clobber them; and a
+    second replicator on the same runtime is a configuration error."""
+    cl = Cluster(2, backend="drust")
+    seen = []
+    cl.drust.on_alloc = lambda raw: seen.append(("alloc", raw))
+    cl.drust.on_free = lambda raw: seen.append(("free", raw))
+    rep = Replicator(cl)
+    cl.replicator = rep
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t0, 64, b"x")
+    raw = A.clear_color(box.g)
+    assert ("alloc", raw) in seen        # pre-installed hook still fired ...
+    assert raw in rep.pending            # ... and so did the replicator's
+    cl.backend.drop(t0, box)
+    assert ("free", raw) in seen
+    assert raw not in rep.pending
+    with pytest.raises(RuntimeError):
+        Replicator(cl)
+
+
+def test_fail_quarantines_surviving_cache_copies():
+    """Regression: ``Replicator.fail`` must scrub surviving servers' cached
+    copies of the dead server's boxes — they may hold writes that died
+    unflushed.  Unpinned copies invalidate on the spot; pinned copies (open
+    ReadGuards) go *suspect*: the holder keeps its frozen snapshot, new
+    lookups miss, and the copy frees at the last unpin."""
+    cl = Cluster(3, backend="drust", replicate=True)
+    t1 = cl.main_thread(0); t1.server = 1
+    t0 = cl.main_thread(0)
+    box_a = cl.backend.alloc(t1, 64, b"a0", server=1)
+    box_b = cl.backend.alloc(t1, 64, b"b0", server=1)
+    cl.replicator.flush_epoch()
+    cl.backend.write(t1, box_a, b"a1-dirty")
+    cl.backend.write(t1, box_b, b"b1-dirty")
+    # warm (unpinned) copies of the dirty bytes on server 0 ...
+    assert cl.backend.read(t0, box_a) == b"a1-dirty"
+    assert cl.backend.read(t0, box_b) == b"b1-dirty"
+    cache = cl.drust.caches[0]
+    assert box_a.g in cache.entries and box_b.g in cache.entries
+    # ... and a pinned one: an open ReadGuard freezes box_b's snapshot
+    g = box_b.read(t0)
+    frozen = g.__enter__()
+    cl.replicator.fail(1)
+    assert box_a.g not in cache.entries          # unpinned -> invalidated
+    assert cache.entries[box_b.g].suspect        # pinned -> suspect
+    assert g.value == frozen == b"b1-dirty"      # holder keeps the snapshot
+    assert cache.lookup(box_b.g) is None         # new lookups miss
+    assert cl.sim.net.suspect_invalidations == 2
+    g.close()
+    assert box_b.g not in cache.entries          # freed at the last unpin
+
+
+def test_int8_checkpoint_fallback_restores_unreplicated():
+    """Objects that never reached the replica map restore from the int8
+    partition checkpoint: lossy (quantized) for float ndarrays, exact for
+    everything else."""
+    cl = Cluster(2, backend="drust", replicate=True)
+    t1 = cl.main_thread(0); t1.server = 1
+    arr = np.linspace(-1.0, 1.0, 64, dtype=np.float32)
+    fbox = cl.backend.alloc(t1, arr.nbytes, arr, server=1)
+    ibox = cl.backend.alloc(t1, 64, [7, 8, 9], server=1)
+    cl.replicator.checkpoint_epoch()             # never flush_epoch'd
+    t0 = cl.main_thread(0)
+    rep = cl.recovery.fail_and_recover(1, t0)
+    assert rep.rehomed_boxes == 2 and rep.lost_boxes == 0
+    got = cl.backend.read(t0, fbox)
+    assert np.allclose(got, arr, atol=1.0 / 127 + 1e-6)   # quantized
+    assert cl.backend.read(t0, ibox) == [7, 8, 9]         # exact
+
+
+def test_moved_object_replica_follows_not_resurrects():
+    """Regression: a remote mutable deref MOVES the object to the writer's
+    partition; the replica keyed by the old (freed) address must follow it.
+    A crash of the old home must not restore stale bytes at a freed —
+    possibly reused — address, and a crash of the NEW home must still
+    revert to the last flushed epoch."""
+    cl = Cluster(3, backend="drust", replicate=True)
+    t1 = cl.main_thread(0); t1.server = 1
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t1, 64, b"v0", server=1)
+    old_raw = A.clear_color(box.g)
+    cl.replicator.flush_epoch()
+    cl.backend.write(t0, box, b"v1")          # remote write: moves to server 0
+    new_raw = A.clear_color(box.g)
+    assert A.server_of(new_raw) == 0 and new_raw != old_raw
+    assert old_raw not in cl.replicator.replicas[1]   # replica followed
+    cl.recovery.fail_and_recover(1, t0)
+    # nothing resurrected at the freed old address; the live copy is intact
+    assert not cl.heap.partitions[1].contains(old_raw)
+    assert cl.backend.read(t0, box) == b"v1"
+    # now flush at the NEW home and crash it: reverts to the flushed epoch
+    cl.replicator.flush_epoch()
+    assert cl.replicator.backup_of[0] not in cl.sim.lost   # re-enlisted
+    cl.backend.write(t0, box, b"v2-dirty")    # local write, no move
+    t2 = cl.main_thread(0); t2.server = 2
+    rep2 = cl.recovery.fail_and_recover(0, t2)
+    assert rep2.lost_writes == 1
+    assert cl.backend.read(t2, box) == b"v1"
+
+
+# --------------------------------------------------------------------------
+#  Fail-over x scoped guards (crash-consistency at the API surface)
+# --------------------------------------------------------------------------
+def test_crash_breaks_open_write_guard():
+    """A surviving holder's open WriteGuard on a dead-home box: the
+    write-back can never land, so the guard surfaces a structured
+    ``ServerLostError`` and releases the borrow WITHOUT writing back —
+    the box reverts to its last flushed epoch."""
+    cl = Cluster(3, backend="drust", replicate=True)
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t0, 64, b"flushed", server=2)
+    cl.replicator.flush_epoch()
+    g = box.write(t0)
+    g.__enter__()                                # borrow taken, not deref'd
+    rep = cl.recovery.fail_and_recover(2, t0)
+    assert rep.broken_guards == 1
+    with pytest.raises(ServerLostError) as ei:
+        g.set(b"never lands")
+    assert ei.value.server == 2
+    with pytest.raises(ServerLostError):
+        g.close()                                # drop raises, does NOT leak
+    assert not box.live_mut and not box.mut_broken and box.mut_tid is None
+    # the borrow is fully released: reads and fresh writes work again
+    assert cl.backend.read(t0, box) == b"flushed"
+    cl.backend.write(t0, box, b"post-recovery")
+    assert cl.backend.read(t0, box) == b"post-recovery"
+
+
+def test_crash_inside_region_keeps_pinned_snapshots():
+    """Crash inside ``cluster.region`` with pins: the pinned ReadGuards
+    keep serving their frozen (possibly dirty) snapshots for the rest of
+    the scope; after the region exits, readers see the restored epoch."""
+    cl = Cluster(3, backend="drust", replicate=True, coalesce="auto")
+    t2 = cl.main_thread(0); t2.server = 2
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t2, 64, b"epoch0", server=2)
+    cl.replicator.flush_epoch()
+    cl.backend.write(t2, box, b"epoch1-dirty")   # dirty past the flush
+    with cl.region(t0, pin=[box]) as r:
+        assert r._pins[0].value == b"epoch1-dirty"
+        rep = cl.recovery.fail_and_recover(2, t0)
+        assert rep.lost_writes == 1
+        # the pin still serves the frozen snapshot inside the scope
+        assert r._pins[0].value == b"epoch1-dirty"
+    # region exited, pins released: the stale copy is gone — readers get
+    # the restored flushed epoch, never the resurrected dirty bytes
+    assert cl.backend.read(t0, box) == b"epoch0"
+
+
+def test_unflushed_writes_reported_not_resurrected():
+    """Crash between ``flush_epoch`` boundaries: the dirty write is LOST
+    (reported in the recovery receipt), and a pre-crash warm cache copy of
+    the dirty bytes must not resurrect it."""
+    cl = Cluster(3, backend="drust", replicate=True)
+    t1 = cl.main_thread(0); t1.server = 1
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t1, 64, b"v0", server=1)
+    cl.replicator.flush_epoch()                  # epoch boundary
+    cl.backend.write(t1, box, b"v1")             # dirty, unflushed
+    assert cl.backend.read(t0, box) == b"v1"     # warm copy of dirty bytes
+    rep = cl.recovery.fail_and_recover(1, t0)
+    assert rep.lost_writes == 1
+    assert cl.sim.net.lost_writes == 1
+    assert rep.dead_threads == 1                 # t1 died with the server
+    assert cl.backend.read(t0, box) == b"v0"     # reverted, not resurrected
+
+
+def test_unreplicated_unflushed_box_is_lost():
+    """No replica, no checkpoint: the box is gone — uses raise a structured
+    ``ServerLostError`` instead of returning garbage."""
+    cl = Cluster(3, backend="drust", replicate=True)
+    t1 = cl.main_thread(0); t1.server = 1
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t1, 64, b"never-flushed", server=1)
+    rep = cl.recovery.fail_and_recover(1, t0)
+    assert rep.lost_boxes == 1 and box.lost
+    with pytest.raises(ServerLostError):
+        cl.backend.read(t0, box)
+    with pytest.raises(ServerLostError):
+        box.write(t0).__enter__()
+
+
+def test_crash_breaks_dead_holders_lock():
+    """A DMutex held by a thread that died with its server is broken with
+    lock-state reconstruction: the holder slot clears, later acquirers
+    serialize behind the recovery barrier instead of deadlocking."""
+    cl = Cluster(3, backend="drust", replicate=True)
+    t0 = cl.main_thread(0)
+    t2 = cl.main_thread(0); t2.server = 2
+    m = DMutex(cl, t0, value=0)
+    assert m in cl.mutexes
+
+    def section(obj):
+        cl.sim.busy(t2, 50.0)
+        rep = cl.recovery.fail_and_recover(2, t0)
+        assert rep.broken_locks == 1
+        raise ServerLostError(2, "holder died mid-critical-section")
+
+    with pytest.raises(ServerLostError):
+        m.with_lock(t2, section)
+    assert m.broken == 1 and m._holder is None
+    assert cl.sim.net.broken_locks == 1
+    # a survivor acquires; its hold starts at/after the recovery barrier
+    m.with_lock(t0, lambda o: o)
+    assert m.acquisitions == 2
+
+
+def test_dead_thread_borrows_force_released():
+    """Borrows held by threads that died with the server are force-released
+    through the per-tid ledger — survivors can re-borrow (no leak), even
+    when the box itself lives on a SURVIVING server."""
+    cl = Cluster(3, backend="drust", replicate=True)
+    t0 = cl.main_thread(0)
+    t2 = cl.main_thread(0); t2.server = 2
+    box = cl.backend.alloc(t0, 64, b"home-on-0", server=0)
+    cl.replicator.flush_epoch()
+    r = box.borrow(t2)                           # dead-thread-to-be's borrow
+    assert box.live_refs == 1
+    rep = cl.recovery.fail_and_recover(2, t0)
+    assert rep.released_borrows == 1
+    assert box.live_refs == 0 and not box.ref_tids
+    # the survivor takes a write borrow: nothing leaked
+    cl.backend.write(t0, box, b"after")
+    assert cl.backend.read(t0, box) == b"after"
 
 
 def test_mem_pressure_evicts_incrementally_to_watermark():
