@@ -29,7 +29,12 @@ sweeps) and compares the *deterministic* metrics against the committed
     ``orphaned_cids``, ``lost_writes``, ``broken_locks``,
     ``dead_threads``) pinned exactly — plus the ``recovery_slo`` pair:
     working-set scaling must keep dominating cluster-size scaling
-    (``slo_ok`` may never flip to false).
+    (``slo_ok`` may never flip to false);
+  * the serving SLOs (``serve``, see ``docs/serving.md``): open-loop
+    p50/p99 tail latency within tolerance in the *upward* direction,
+    goodput within tolerance in the *downward* direction, and the
+    protocol counters underneath (round trips, KV hit/miss, wire bytes,
+    weight refreshes, completions) pinned exactly.
 
 Wall-clock microsecond columns are ignored — they are noise on shared CI
 runners; everything gated here comes from the deterministic simulator.
@@ -60,6 +65,13 @@ PREFETCH_EXACT = ("round_trips", "speculative_fetches", "late_fences",
                   "wasted_prefetches")
 RECOVERY_EXACT = ("restored_bytes", "rehomed_boxes", "orphaned_cids",
                   "lost_writes", "broken_locks", "dead_threads")
+# Serving SLO columns (open-loop sweep): tail latency regresses UPWARD,
+# goodput regresses DOWNWARD — both gated within tolerance; the protocol
+# counters underneath are deterministic and pinned exactly.
+SERVE_WORSE_UP = ("p50_us", "p99_us")
+SERVE_WORSE_DOWN = ("goodput_tok_s",)
+SERVE_EXACT = ("completed", "slo_met", "steps", "round_trips", "kv_hits",
+               "kv_misses", "wire_bytes", "weight_refreshes")
 
 
 def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
@@ -136,6 +148,37 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
                         f"{section}/{name}/{metric}: {cur_entry.get(metric)} "
                         f"!= baseline {base_entry[metric]} (deterministic "
                         f"counter, pinned exactly)")
+    for name, base_entry in sorted(baseline.get("serve", {}).items()):
+        cur_entry = current.get("serve", {}).get(name)
+        if cur_entry is None:
+            failures.append(f"serve/{name}: missing from current run")
+            continue
+        for metric in SERVE_WORSE_UP:
+            base, cur = base_entry[metric], cur_entry.get(metric)
+            if cur is None:
+                failures.append(f"serve/{name}/{metric}: missing")
+            elif cur > base * (1.0 + tolerance):
+                failures.append(
+                    f"serve/{name}/{metric}: {cur} vs baseline {base} "
+                    f"(+{100 * (cur / base - 1):.1f}%, "
+                    f"tol {100 * tolerance:.0f}%) — tail latency SLO")
+        for metric in SERVE_WORSE_DOWN:
+            base, cur = base_entry[metric], cur_entry.get(metric)
+            if cur is None:
+                failures.append(f"serve/{name}/{metric}: missing")
+            elif cur < base * (1.0 - tolerance):
+                failures.append(
+                    f"serve/{name}/{metric}: {cur} vs baseline {base} "
+                    f"(-{100 * (1 - cur / base):.1f}%, "
+                    f"tol {100 * tolerance:.0f}%) — goodput SLO")
+        for metric in SERVE_EXACT:
+            if base_entry.get(metric) is None:
+                continue
+            if cur_entry.get(metric) != base_entry[metric]:
+                failures.append(
+                    f"serve/{name}/{metric}: {cur_entry.get(metric)} != "
+                    f"baseline {base_entry[metric]} (deterministic counter, "
+                    f"pinned exactly)")
     # Recovery SLO: not a counter comparison — the committed baseline says
     # working-set scaling dominates cluster-size scaling, and it must stay
     # that way on the current run (schema has no makespan_us, so it stays
@@ -199,6 +242,8 @@ def main(argv=None) -> int:
         1 + len(COALESCE_EXACT))
     n_gated += len(baseline.get("prefetch", {})) * (1 + len(PREFETCH_EXACT))
     n_gated += len(baseline.get("recovery", {})) * (1 + len(RECOVERY_EXACT))
+    n_gated += len(baseline.get("serve", {})) * (
+        len(SERVE_WORSE_UP) + len(SERVE_WORSE_DOWN) + len(SERVE_EXACT))
     n_gated += 1 if baseline.get("recovery_slo", {}).get("slo_ok") else 0
     print(f"bench gate OK: {n_gated} metrics within "
           f"{100 * args.tolerance:.0f}% of {args.baseline}")

@@ -28,6 +28,12 @@ server under the OOO plane (with a dirty unflushed write and an in-flight
 speculative READ to quiesce) at 2/4/8/16 servers x two working-set sizes,
 and gates the paper-shaped SLO: the fail-over makespan scales with the
 dead server's restored working set, not with cluster size.
+
+The serving sweep (``_serve_run``/``serve_summary``) replays seeded
+open-loop arrival traces (Poisson and bursty) against a ``ServeFleet``
+of DSM-backed engine replicas at 1/4/8 servers and reports the tail
+latency (p50/p99, queueing included) and SLO-met goodput that
+``check_regression.py`` gates — serving SLOs, not just protocol counters.
 """
 
 from __future__ import annotations
@@ -391,6 +397,95 @@ def recovery_slo() -> dict:
     }
 
 
+# --------------------------------------------------------------------------
+#  Serving SLO sweep (open-loop tail latency + goodput)
+# --------------------------------------------------------------------------
+SERVE_SLO_US = 5000.0        # per-request latency SLO (arrival -> last token)
+SERVE_DECODE_CYCLES = 390_000.0          # ~150 us/decode tick at 2.6 GHz
+
+
+def _serve_run(n_servers: int, trace: str = "poisson",
+               n_requests: int = 72, rate_per_s: float = 2500.0,
+               seed: int = 11, wire: str = "int8",
+               weight_push_every: int = 8):
+    """One open-loop serving trace: a ``ServeFleet`` (one engine replica
+    per server, shared DSM page table) replayed against a seeded arrival
+    trace.  The decode function is a deterministic stub — the trajectory
+    measured here is purely the protocol + queueing behavior on virtual
+    clocks, so the SLO columns are byte-reproducible.  Weight pushes every
+    ``weight_push_every`` steps bump the published color, forcing real
+    int8 wire refreshes mid-load.  Returns (cluster, fleet, driver)."""
+    import numpy as np
+
+    from repro.core.jaxstate import OwnedState
+    from repro.serve import (OpenLoopDriver, ServeFleet, bursty_trace,
+                             poisson_trace, synth_prompts)
+
+    cl = Cluster(n_servers, backend="drust", ooo=True, qps_per_thread=2)
+    weights = OwnedState("bench_w", {"w": np.ones((128, 128), np.float32)})
+
+    def stub_step(params, cache, tokens):
+        return (tokens * 13 + 7) % 997, cache
+
+    fleet = ServeFleet(cl, step_fn=stub_step, page_size=8, slots=4,
+                       max_len=64, weights=weights, wire=wire,
+                       weights_server=0,
+                       decode_cycles=SERVE_DECODE_CYCLES)
+    prompts = synth_prompts(n_requests, seed=seed)
+    mk = poisson_trace if trace == "poisson" else bursty_trace
+    arrivals = mk(rate_per_s, n_requests, seed=seed + 1)
+    drv = OpenLoopDriver(fleet, arrivals, prompts, max_new=8,
+                         weight_push_every=weight_push_every)
+    drv.run()
+    return cl, fleet, drv
+
+
+SERVE_POINTS = (("poisson_1srv", 1, "poisson"),
+                ("poisson_4srv", 4, "poisson"),
+                ("poisson_8srv", 8, "poisson"),
+                ("bursty_4srv", 4, "bursty"))
+
+
+def serve_slo_sweep():
+    """Row view (CSV) of the serving sweep: p99 in the time column, SLO-met
+    goodput in the derived column."""
+    rows = []
+    for name, n, trace in SERVE_POINTS:
+        _, _, drv = _serve_run(n, trace)
+        r = drv.result(SERVE_SLO_US)
+        rows.append((f"serve_{name}_p99", r.p99_us,
+                     round(r.goodput_tok_s, 1)))
+    return rows
+
+
+def serve_summary() -> dict:
+    """Deterministic serving trajectory for ``BENCH_protocol.json``: tail
+    latency (p50/p99, higher is worse) and goodput (SLO-met tokens per
+    virtual second, LOWER is worse) within tolerance, plus the protocol
+    counters (round trips, KV hit/miss, int8 wire bytes, weight
+    refreshes) pinned exactly — everything runs on virtual clocks over
+    seeded traces, so any drift is a behavior change."""
+    out = {}
+    for name, n, trace in SERVE_POINTS:
+        cl, fleet, drv = _serve_run(n, trace)
+        r = drv.result(SERVE_SLO_US)
+        st = fleet.stats()
+        out[name] = {
+            "p50_us": r.p50_us,
+            "p99_us": r.p99_us,
+            "goodput_tok_s": r.goodput_tok_s,
+            "completed": r.completed,
+            "slo_met": r.slo_met,
+            "steps": st["steps"],
+            "round_trips": cl.sim.net.round_trips,
+            "kv_hits": st["kv"]["hits"],
+            "kv_misses": st["kv"]["misses"],
+            "wire_bytes": st["wire_bytes"],
+            "weight_refreshes": st["weight_refreshes"],
+        }
+    return out
+
+
 def clone_fastpath_guard(n_elems: int = 4096, reps: int = 30):
     """Microbenchmark guard for ``ownership._clone``: flat scalar containers
     must take the shallow fast path, not ``deepcopy``.  ``derived`` is the
@@ -429,6 +524,7 @@ def all_rows():
     rows += qp_readmany_sweep()
     rows += coalesce_budget_sweep()
     rows += recovery_sweep()
+    rows += serve_slo_sweep()
     rows += clone_fastpath_guard()
     return rows
 

@@ -5,7 +5,8 @@ plus the JAX-side kernel and roofline benches when their artifacts exist.
 
 ``--quick`` is the CI smoke mode: it runs only the protocol micro-benchmarks
 and the batched-I/O-plane app sweep and writes a ``BENCH_protocol.json``
-summary (round trips, makespan, doorbell stats) so successive PRs leave a
+summary (round trips, makespan, doorbell stats, and the open-loop serving
+SLO columns — p50/p99 tail latency + goodput) so successive PRs leave a
 comparable perf trajectory.
 """
 
@@ -56,6 +57,10 @@ def quick(out_path: str = "BENCH_protocol.json") -> dict:
         # that working-set scaling dominates cluster-size scaling.
         "recovery": protocol_micro.recovery_summary(),
         "recovery_slo": protocol_micro.recovery_slo(),
+        # Serving SLO trajectory: open-loop (Poisson/bursty) tail latency
+        # and goodput over the DSM-backed ServeFleet — p50/p99 higher-is-
+        # worse, goodput lower-is-worse, protocol counters pinned exactly.
+        "serve": protocol_micro.serve_summary(),
         "prefetch": {},
     }
     for app, fn, kw in (
@@ -115,6 +120,9 @@ def main() -> None:
         for name, meta in summary["recovery"].items():
             print(f"quick_recovery_{name},{meta['makespan_us']:.2f},"
                   f"{meta['restored_bytes']}")
+        for name, meta in summary["serve"].items():
+            print(f"quick_serve_{name}_p99,{meta['p99_us']:.2f},"
+                  f"{meta['goodput_tok_s']}")
         slo = summary["recovery_slo"]
         print(f"quick_recovery_slo_ok,0.00,{slo['slo_ok']}")
         print("wrote BENCH_protocol.json", file=sys.stderr)

@@ -44,8 +44,7 @@ def main():
     replica = StateCache()
     replica.fetch(weights)                         # replica caches color 0
     replica.fetch(weights)                         # zero-communication hit
-    with weights.borrow_mut() as m:                # one write epoch
-        m.set({"w": jnp.ones(4)})
+    weights.write({"w": jnp.ones(4)})              # one write epoch
     replica.fetch(weights)                         # color changed: refetch
     print(f"weight cache: {replica.hits} zero-comm hits, "
           f"{replica.refreshes} refreshes, 0 invalidation messages")

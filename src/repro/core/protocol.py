@@ -52,6 +52,24 @@ class BorrowError(RuntimeError):
 _MISSING = object()          # sentinel: "not staged / not fetched yet"
 
 
+def _bump_guard_stat(backend, key: str) -> None:
+    """Count guard entries on the backend (``backend.guard_stats``).
+
+    Lazy per-backend dict so every engine gets the counters without any
+    subclass opt-in; a ``__slots__`` backend simply goes uncounted.  The
+    counters are observability only (serve ``stats()``, debugging) — they
+    are never charged to the cost model and never gated.
+    """
+    stats = getattr(backend, "guard_stats", None)
+    if stats is None:
+        try:
+            stats = backend.guard_stats = {
+                "read_guards": 0, "write_guards": 0, "regions": 0, "pins": 0}
+        except AttributeError:               # pragma: no cover - __slots__
+            return
+    stats[key] = stats.get(key, 0) + 1
+
+
 # --------------------------------------------------------------------------
 #  Backend registry (capability lookup without string special-casing)
 # --------------------------------------------------------------------------
@@ -215,6 +233,7 @@ class ReadGuard:
                  else self.backend._enter_read)
         self._token, self._value = enter(self.th, self.h)
         self._state = "open"
+        _bump_guard_stat(self.backend, "pins" if self._pin else "read_guards")
         return self._value
 
     @property
@@ -255,6 +274,7 @@ class WriteGuard:
             raise BorrowError("write guard re-entered")
         self._token = self.backend._enter_write(self.th, self.h)
         self._state = "open"
+        _bump_guard_stat(self.backend, "write_guards")
         return self
 
     def _check_open(self):
@@ -316,6 +336,7 @@ class Region:
         if self._state != "new":
             raise BorrowError("region re-entered")
         self._state = "open"
+        _bump_guard_stat(self.cluster.backend, "regions")
         try:
             if self._prefetch:
                 self.prefetch(self._prefetch)

@@ -1,6 +1,25 @@
-from .kvcache import PagedKVCache, Page
-from .serve_step import make_serve_step, make_prefill
-from .engine import ServeEngine, Request
+"""The DSM-backed serving plane (see ``docs/serving.md``).
 
-__all__ = ["Page", "PagedKVCache", "Request", "ServeEngine",
-           "make_prefill", "make_serve_step"]
+Import note: the jitted decode path (``serve_step`` and the model stack
+behind it) loads lazily — a ``step_fn``-stubbed engine, as used by the SLO
+benches and the simulator-only tests, never traces or jits a model.
+"""
+
+from .engine import Request, ServeEngine, ServeFleet
+from .kvcache import Page, PagedKVCache
+from .loadgen import (LoadResult, OpenLoopDriver, bursty_trace,
+                      poisson_trace, synth_prompts)
+
+__all__ = ["LoadResult", "OpenLoopDriver", "Page", "PagedKVCache",
+           "Request", "ServeEngine", "ServeFleet", "bursty_trace",
+           "make_prefill", "make_serve_step", "poisson_trace",
+           "synth_prompts"]
+
+
+def __getattr__(name):
+    # serve_step imports jax at module scope; keep it out of the package's
+    # import path so cluster-only users never pay (or need) it.
+    if name in ("make_serve_step", "make_prefill"):
+        from . import serve_step
+        return getattr(serve_step, name)
+    raise AttributeError(name)

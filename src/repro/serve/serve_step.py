@@ -1,4 +1,13 @@
-"""Compiled serving steps: batched greedy decode + prefill."""
+"""Compiled serving steps: batched greedy decode + prefill.
+
+These are the *device-side* kernels under the engine's guard surface: the
+engine runs each tick inside ``cluster.region(th, prefetch=...)``, fetches
+weights through the colored ``StateCache`` (a scoped immutable borrow of
+the published ``OwnedState``), and only then calls the jitted step.  The
+decode cache is donated by the engine's jit wrapper, so the in-place
+append is the device analogue of a ``WriteGuard``: an exclusive borrow of
+the owner's buffer, local write + color bump at drop, no invalidation
+traffic to any replica."""
 
 from __future__ import annotations
 

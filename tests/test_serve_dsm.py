@@ -1,0 +1,404 @@
+"""DSM-backed serving plane: protocol semantics, admission, open-loop
+load, digest equivalence across cluster sizes, and the serving SLO gate.
+
+Everything except the two real-model tests runs with a deterministic stub
+decode function, so these tests exercise the protocol + queueing behavior
+on virtual clocks only (no jit, no model)."""
+
+import numpy as np
+import pytest
+
+from repro.core import BorrowError, Cluster
+from repro.core.jaxstate import OwnedState
+from repro.serve import (OpenLoopDriver, PagedKVCache, ServeEngine,
+                         ServeFleet, bursty_trace, poisson_trace,
+                         synth_prompts)
+
+
+def stub_step(params, cache, tokens):
+    return (tokens * 7 + 3) % 256, cache
+
+
+def make_engine(cluster=None, **kw):
+    kw.setdefault("page_size", 4)
+    kw.setdefault("slots", 4)
+    kw.setdefault("max_len", 64)
+    return ServeEngine(step_fn=stub_step, cluster=cluster, **kw)
+
+
+def run_to_drain(eng, max_steps=5000):
+    for _ in range(max_steps):
+        if not eng.queue and not eng.active:
+            return
+        eng.step()
+    raise AssertionError("engine did not drain")
+
+
+# --------------------------------------------------------------------------
+#  KV cache edge cases
+# --------------------------------------------------------------------------
+def test_page_full_is_live():
+    kv = PagedKVCache(page_size=3)
+    p = kv.alloc_page((1, 2))
+    assert not p.full
+    kv.append(p, 3)
+    assert p.full                       # wired to page_size now
+    with pytest.raises(BorrowError):
+        kv.append(p, 4)                 # append must respect fullness
+    with pytest.raises(ValueError):
+        kv.alloc_page((1, 2, 3, 4))     # overflow rejected at alloc too
+
+
+def test_evict_under_borrow_skips_pinned_pages():
+    kv = PagedKVCache(page_size=4, capacity_pages=8)
+    pinned = kv.retain(kv.alloc_page((1, 2)))
+    free = kv.alloc_page((3, 4))
+    assert kv.evict(10) == 1            # only the unreferenced page goes
+    assert pinned.addr.name in kv.pages
+    assert free.addr.name not in kv.pages
+    # a page mid-append (mut borrow) is not evictable either
+    pinned.refcount = 0
+    pinned.mut_borrowed = True
+    assert kv.evict(10) == 0
+    pinned.mut_borrowed = False
+    assert kv.evict(10) == 1
+
+
+def test_evict_frees_dsm_box():
+    cl = Cluster(2, backend="drust")
+    th = cl.main_thread(0)
+    kv = PagedKVCache(page_size=4, cluster=cl, th=th)
+    p = kv.alloc_page((1, 2))
+    box = p.box
+    assert box is not None and not box.dropped
+    assert kv.evict(1) == 1
+    assert box.dropped                  # eviction drops the protocol object
+
+
+def test_capacity_pressure_with_all_pages_pinned():
+    kv = PagedKVCache(page_size=4, capacity_pages=2)
+    kv.retain(kv.alloc_page((1,)))
+    kv.retain(kv.alloc_page((2,)))
+    with pytest.raises(MemoryError):
+        kv.alloc_page((3,))
+
+
+def test_fork_copy_on_write_refcounts():
+    kv = PagedKVCache(page_size=8)
+    p = kv.alloc_page((1, 2, 3))
+    kv.seal(p)
+    kv.retain(p); kv.retain(p)          # two requests share the page
+    assert p.refcount == 2
+    with pytest.raises(BorrowError):
+        kv.append(p, 4)                 # shared: copy-on-write required
+    forked = kv.fork(p)                 # writer's ref migrates to the fork
+    assert forked.refcount == 1
+    assert p.refcount == 1              # the other reader keeps its ref
+    kv.append(forked, 4)
+    assert forked.tokens == (1, 2, 3, 4)
+    assert p.tokens == (1, 2, 3)        # original never mutated
+
+
+def test_stale_prefix_entry_scrubbed_after_color_bump():
+    kv = PagedKVCache(page_size=8)
+    p = kv.alloc_page((1, 2))
+    c0 = p.addr.color
+    # An index snapshot taken before a write epoch: the colored address it
+    # records stops naming these bytes once an append bumps the color.
+    kv.prefix_index[(1, 2)] = p.addr.name
+    assert kv.lookup_prefix((1, 2)) is p
+    kv.append(p, 3)
+    assert p.addr.color == c0 + 1
+    misses0 = kv.misses
+    assert kv.lookup_prefix((1, 2)) is None   # stale -> miss
+    assert kv.misses == misses0 + 1
+    assert (1, 2) not in kv.prefix_index      # and scrubbed
+    # entry pointing at an evicted page scrubs the same way
+    kv.seal(p)
+    kv.pages.pop(p.addr.name)
+    assert kv.lookup_prefix((1, 2, 3)) is None
+    assert (1, 2, 3) not in kv.prefix_index
+
+
+def test_peek_prefix_has_no_side_effects():
+    kv = PagedKVCache(page_size=4)
+    p = kv.alloc_page((1, 2))
+    kv.seal(p)
+    h0, m0 = kv.hits, kv.misses
+    assert kv.peek_prefix((1, 2)) is p
+    assert kv.peek_prefix((9, 9)) is None
+    kv.prefix_index[(7, 7)] = "gone"
+    assert kv.peek_prefix((7, 7)) is None
+    assert (7, 7) in kv.prefix_index          # no scrub either
+    assert (kv.hits, kv.misses) == (h0, m0)
+
+
+def test_append_is_exclusive_and_guard_scoped():
+    cl = Cluster(2, backend="drust")
+    th = cl.main_thread(0)
+    kv = PagedKVCache(page_size=8, cluster=cl, th=th)
+    p = kv.alloc_page((1,))
+    kv.append(p, 2)
+    with p.box.read(th) as v:
+        assert tuple(v) == (1, 2)             # write-back landed
+    kv.freeze(p)
+    with pytest.raises(BorrowError):
+        kv.append(p, 3)
+
+
+def test_reclaim_chain_frees_tied_closure():
+    cl = Cluster(2, backend="drust")
+    th = cl.main_thread(0)
+    kv = PagedKVCache(page_size=2, cluster=cl, th=th)
+    root = kv.alloc_page((1, 2), local=True)
+    mid = kv.alloc_page((3, 4), tie_to=root, local=True)
+    tail = kv.alloc_page((5,), tie_to=mid, local=True)
+    boxes = [root.box, mid.box, tail.box]
+    kv.reclaim_chain([root, mid, tail])
+    assert all(b.dropped for b in boxes)      # one root drop, whole closure
+    assert not kv.pages
+
+
+# --------------------------------------------------------------------------
+#  Engine admission
+# --------------------------------------------------------------------------
+def test_admission_slot_reuse_and_queue_drain():
+    eng = make_engine(slots=2)
+    reqs = [eng.submit([i, i + 1, i + 2], max_new=3) for i in range(7)]
+    max_active = 0
+    for _ in range(500):
+        if not eng.queue and not eng.active:
+            break
+        eng.step()
+        max_active = max(max_active, len(eng.active))
+    assert max_active == 2                    # never exceeds the slot count
+    assert not eng.queue and not eng.active   # queue fully drained
+    assert all(r.done and len(r.generated) == 3 for r in reqs)
+    assert len(eng.finished) == 7
+
+
+def test_admission_max_len_truncation():
+    eng = make_engine(max_len=16)
+    req = eng.submit(list(range(30)), max_new=8)
+    assert len(req.prompt) == 8               # head-truncated to fit budget
+    assert req.prompt == list(range(22, 30))  # keeps the recent context
+    with pytest.raises(ValueError):
+        eng.submit([1, 2], max_new=99)        # max_new alone exceeds max_len
+    run_to_drain(eng)
+    assert len(req.generated) == 8
+
+
+def test_admission_identical_on_both_planes():
+    cl = Cluster(2)
+    local, dsm = make_engine(max_len=16), make_engine(cluster=cl, max_len=16)
+    for e in (local, dsm):
+        e.submit(list(range(30)), max_new=8)
+        e.submit([1, 2, 3], max_new=4)
+    assert [r.prompt for r in local.queue] == [r.prompt for r in dsm.queue]
+
+
+def test_prefix_pages_shared_across_requests():
+    cl = Cluster(4)
+    eng = make_engine(cluster=cl, slots=4, page_size=4)
+    base = [7, 7, 7, 7]                       # one full shared prefix page
+    for i in range(4):
+        eng.submit(base + [i], max_new=2)
+    run_to_drain(eng)
+    st = eng.stats()
+    assert st["kv"]["hits"] >= 3              # page reused by requests 2..4
+    assert st["guard_stats"]["regions"] == eng.steps
+    assert st["guard_stats"]["write_guards"] > 0
+
+
+# --------------------------------------------------------------------------
+#  Digest equivalence: the protocol moves costs, not results
+# --------------------------------------------------------------------------
+def _digest_run(engine_or_fleet, prompts, max_new=6):
+    for p in prompts:
+        engine_or_fleet.submit(p, max_new=max_new)
+    for _ in range(5000):
+        if not engine_or_fleet.queue and not engine_or_fleet.active:
+            break
+        engine_or_fleet.step()
+    return engine_or_fleet.digest()
+
+
+def test_digest_identical_across_cluster_sizes():
+    prompts = synth_prompts(24, seed=5)
+    d_local = _digest_run(make_engine(), prompts)
+    for n in (1, 2, 4, 8):
+        cl = Cluster(n)
+        assert _digest_run(make_engine(cluster=cl), prompts) == d_local, \
+            f"digest diverged at {n} servers"
+
+
+def test_digest_identical_for_fleet():
+    prompts = synth_prompts(24, seed=5)
+    d_local = _digest_run(make_engine(), prompts)
+    for n in (2, 4, 8):
+        cl = Cluster(n)
+        fleet = ServeFleet(cl, step_fn=stub_step, page_size=4, slots=4,
+                           max_len=64)
+        assert _digest_run(fleet, prompts) == d_local, \
+            f"fleet digest diverged at {n} replicas"
+
+
+def test_digest_identical_with_real_model_raw_wire():
+    import jax
+
+    from repro import configs
+    from repro.models import init_params
+
+    cfg = configs.smoke("qwen3_0_6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, cfg.attn_chunk + 3))
+               for _ in range(3)]
+
+    def run(cluster):
+        eng = ServeEngine(cfg, OwnedState("w", params), slots=2,
+                          max_len=128, cluster=cluster, wire="raw")
+        return _digest_run(eng, prompts, max_new=4)
+
+    assert run(None) == run(Cluster(4))
+
+
+# --------------------------------------------------------------------------
+#  Open-loop load + weight refresh
+# --------------------------------------------------------------------------
+def test_traces_are_seeded_and_shaped():
+    a = poisson_trace(1000.0, 200, seed=3)
+    assert a == poisson_trace(1000.0, 200, seed=3)
+    assert a != poisson_trace(1000.0, 200, seed=4)
+    assert all(t1 <= t2 for t1, t2 in zip(a, a[1:]))      # monotone
+    gaps = np.diff(a)
+    assert 600 < gaps.mean() < 1600                       # ~1000us mean gap
+    b = bursty_trace(1000.0, 400, seed=3, burst_factor=4.0, duty=0.25)
+    mean_rate = len(b) / ((b[-1] - b[0]) / 1e6)
+    assert 600 < mean_rate < 1600                         # mean preserved
+    # burstiness: inter-arrival variability well above Poisson's
+    assert np.diff(b).std() > gaps.std()
+
+
+def test_open_loop_latency_includes_queueing():
+    cl = Cluster(1)
+    eng = make_engine(cluster=cl, slots=1, decode_cycles=260_000.0)
+    prompts = [[1, 2, 3], [4, 5, 6]]
+    drv = OpenLoopDriver(eng, [0.0, 0.0], prompts, max_new=4)
+    drv.run()
+    r1, r2 = sorted(eng.finished, key=lambda r: r.rid)
+    assert r2.latency_us > r1.latency_us      # second request queued
+    res = drv.result(slo_us=r1.latency_us + 0.001)
+    assert res.completed == 2 and res.slo_met == 1
+    assert res.p99_us >= res.p50_us
+
+
+def test_weight_refresh_int8_vs_raw_wire_bytes():
+    def run(wire):
+        cl = Cluster(2)
+        w = OwnedState(f"w_{wire}", {"w": np.ones((64, 64), np.float32)})
+        eng = make_engine(cluster=cl, weights=w, wire=wire,
+                          weights_server=1)
+        n = 16
+        drv = OpenLoopDriver(eng, poisson_trace(2000.0, n, seed=9),
+                             synth_prompts(n, seed=9), max_new=4,
+                             weight_push_every=4)
+        drv.run()
+        return eng
+
+    raw, int8 = run("raw"), run("int8")
+    assert raw.digest() == int8.digest()      # stub decode: tokens exact
+    assert raw.weight_cache.refreshes == int8.weight_cache.refreshes > 1
+    # int8 ships ~4x fewer bytes per refresh (int8 payload + f32 scales)
+    ratio = raw.wire_bytes / int8.wire_bytes
+    assert 3.5 < ratio < 4.5
+    # refresh cost is charged to the wire: remote weight server => rtts
+    assert raw.cluster.sim.net.round_trips > 0
+
+
+def test_weight_color_hit_is_zero_comm():
+    cl = Cluster(2)
+    w = OwnedState("w_hit", {"w": np.ones((8, 8), np.float32)})
+    eng = make_engine(cluster=cl, weights=w, weights_server=1)
+    for p in synth_prompts(6, seed=1):
+        eng.submit(p, max_new=4)
+    run_to_drain(eng)
+    # weights never republished: exactly one refresh, rest zero-comm hits
+    assert eng.weight_cache.refreshes == 1
+    assert eng.weight_cache.hits == eng.steps - 1
+
+
+def test_region_prefetch_posts_speculative_doorbells():
+    cl = Cluster(4)
+    # Engine on server 1: the striped shared-prefix page lands on server 0,
+    # so the next-window hint has a genuinely cold remote box to speculate
+    # on (prefetch correctly skips local/warm/in-flight boxes).
+    eng = make_engine(cluster=cl, slots=1, prefetch_window=2, page_size=4,
+                      server=1)
+    base = [3, 3, 3, 3]
+    for i in range(3):
+        eng.submit(base + [i], max_new=2)
+    run_to_drain(eng)
+    assert cl.sim.net.speculative_fetches > 0
+
+
+# --------------------------------------------------------------------------
+#  The SLO gate
+# --------------------------------------------------------------------------
+def _fake_serve_baseline():
+    return {"serve": {"poisson_4srv": {
+        "p50_us": 1000.0, "p99_us": 2000.0, "goodput_tok_s": 20000.0,
+        "completed": 72, "slo_met": 72, "steps": 500, "round_trips": 150,
+        "kv_hits": 68, "kv_misses": 4, "wire_bytes": 3_000_000,
+        "weight_refreshes": 200}}}
+
+
+def test_gate_trips_on_p99_regression():
+    import copy
+
+    from benchmarks.check_regression import compare
+
+    base = _fake_serve_baseline()
+    ok = copy.deepcopy(base)
+    ok["serve"]["poisson_4srv"]["p99_us"] = 2100.0        # +5%: within tol
+    assert compare(base, ok, 0.10) == []
+    bad = copy.deepcopy(base)
+    bad["serve"]["poisson_4srv"]["p99_us"] = 2300.0       # +15%: trips
+    fails = compare(base, bad, 0.10)
+    assert any("p99_us" in f and "tail latency" in f for f in fails)
+
+
+def test_gate_trips_on_goodput_drop_and_counter_drift():
+    import copy
+
+    from benchmarks.check_regression import compare
+
+    base = _fake_serve_baseline()
+    bad = copy.deepcopy(base)
+    bad["serve"]["poisson_4srv"]["goodput_tok_s"] = 17000.0   # -15%
+    assert any("goodput" in f for f in compare(base, bad, 0.10))
+    # goodput going UP is an improvement, never a failure
+    up = copy.deepcopy(base)
+    up["serve"]["poisson_4srv"]["goodput_tok_s"] = 40000.0
+    assert compare(base, up, 0.10) == []
+    # deterministic counters are pinned exactly, both directions
+    drift = copy.deepcopy(base)
+    drift["serve"]["poisson_4srv"]["round_trips"] = 149
+    assert any("round_trips" in f for f in compare(base, drift, 0.10))
+    missing = {"serve": {}}
+    assert any("missing" in f for f in compare(base, missing, 0.10))
+
+
+def test_committed_baseline_has_serve_section():
+    import json
+    import pathlib
+
+    root = pathlib.Path(__file__).resolve().parents[1]
+    baseline = json.loads((root / "BENCH_protocol.json").read_text())
+    assert set(baseline["serve"]) == {"poisson_1srv", "poisson_4srv",
+                                      "poisson_8srv", "bursty_4srv"}
+    for entry in baseline["serve"].values():
+        for col in ("p50_us", "p99_us", "goodput_tok_s", "completed",
+                    "round_trips", "kv_hits", "kv_misses", "wire_bytes",
+                    "weight_refreshes"):
+            assert col in entry

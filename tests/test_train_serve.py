@@ -152,8 +152,9 @@ def test_serve_engine_drains_and_shares_prefixes():
 
 def test_kvcache_protocol_semantics():
     from repro.serve.kvcache import PagedKVCache
-    kv = PagedKVCache(page_size=4, capacity_pages=8)
+    kv = PagedKVCache(page_size=8, capacity_pages=8)
     p = kv.alloc_page((1, 2, 3))
+    assert not p.full                   # capacity 8, 3 tokens
     c0 = p.addr.color
     kv.append(p, 4)
     assert p.addr.color == c0 + 1       # append bumps the color
