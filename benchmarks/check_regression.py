@@ -30,6 +30,13 @@ sweeps) and compares the *deterministic* metrics against the committed
     ``dead_threads``) pinned exactly — plus the ``recovery_slo`` pair:
     working-set scaling must keep dominating cluster-size scaling
     (``slo_ok`` may never flip to false);
+  * the lock-contention sweep (``lock_sweep``, see ``docs/sync.md``):
+    spin/delegate/lease makespans within tolerance per (mode, cluster
+    size) point, with the synchronization counters (``round_trips``,
+    ``atomics``, ``delegated_sections``, ``convoy_completions``,
+    ``closure_ships``, ``lease_grants``, ``lease_revokes``) pinned
+    exactly — delegation's amortized-convoy advantage over spin is held
+    by the makespan gate on both rows;
   * the serving SLOs (``serve``, see ``docs/serving.md``): open-loop
     p50/p99 tail latency within tolerance in the *upward* direction,
     goodput within tolerance in the *downward* direction, and the
@@ -65,6 +72,9 @@ PREFETCH_EXACT = ("round_trips", "speculative_fetches", "late_fences",
                   "wasted_prefetches")
 RECOVERY_EXACT = ("restored_bytes", "rehomed_boxes", "orphaned_cids",
                   "lost_writes", "broken_locks", "dead_threads")
+LOCK_EXACT = ("round_trips", "atomics", "delegated_sections",
+              "convoy_completions", "closure_ships", "lease_grants",
+              "lease_revokes")
 # Serving SLO columns (open-loop sweep): tail latency regresses UPWARD,
 # goodput regresses DOWNWARD — both gated within tolerance; the protocol
 # counters underneath are deterministic and pinned exactly.
@@ -126,7 +136,8 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
                     f"(deterministic counter, pinned exactly)")
     for section, exact in (("coalesce_sweep", COALESCE_EXACT),
                            ("prefetch", PREFETCH_EXACT),
-                           ("recovery", RECOVERY_EXACT)):
+                           ("recovery", RECOVERY_EXACT),
+                           ("lock_sweep", LOCK_EXACT)):
         for name, base_entry in sorted(baseline.get(section, {}).items()):
             cur_entry = current.get(section, {}).get(name)
             if cur_entry is None:
@@ -242,6 +253,7 @@ def main(argv=None) -> int:
         1 + len(COALESCE_EXACT))
     n_gated += len(baseline.get("prefetch", {})) * (1 + len(PREFETCH_EXACT))
     n_gated += len(baseline.get("recovery", {})) * (1 + len(RECOVERY_EXACT))
+    n_gated += len(baseline.get("lock_sweep", {})) * (1 + len(LOCK_EXACT))
     n_gated += len(baseline.get("serve", {})) * (
         len(SERVE_WORSE_UP) + len(SERVE_WORSE_DOWN) + len(SERVE_EXACT))
     n_gated += 1 if baseline.get("recovery_slo", {}).get("slo_ok") else 0

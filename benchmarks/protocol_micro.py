@@ -34,6 +34,16 @@ open-loop arrival traces (Poisson and bursty) against a ``ServeFleet``
 of DSM-backed engine replicas at 1/4/8 servers and reports the tail
 latency (p50/p99, queueing included) and SLO-met goodput that
 ``check_regression.py`` gates — serving SLOs, not just protocol counters.
+
+The lock-contention sweep (``_lock_run``/``lock_sweep_summary``) hammers
+16 distributed locks under zipf(0.99) skew at 2/8/64 servers in three
+synchronization designs (``docs/sync.md``): spin DMutex (remote verbs
+per data access while holding the lock), delegation/combining DMutex
+(critical sections ship to the lock home; one amortized round trip per
+convoy), and DRwLock reader leases (reads free after the grant until a
+writer revokes).  Delegation must beat spin on makespan AND round trips
+at 8+ servers with the gap widening in cluster size — the scalable-
+synchronization acceptance criterion, pinned by the gate.
 """
 
 from __future__ import annotations
@@ -395,6 +405,91 @@ def recovery_slo() -> dict:
         "srv_scale_8boxes_2to16_srv": round(srv_scale, 3),
         "slo_ok": bool(ws_scale > srv_scale),
     }
+
+
+# --------------------------------------------------------------------------
+#  Lock-contention sweep (spin vs delegation vs reader leases)
+# --------------------------------------------------------------------------
+def _lock_run(n_servers: int, mode: str, skew: float = 0.99,
+              n_locks: int = 16, ops_per_server: int = 16, reads: int = 2,
+              seed: int = 0):
+    """One contention run: one worker per server, ``ops_per_server`` ops
+    each over ``n_locks`` lock-protected counters (homes striped across
+    servers) under zipf(``skew``) lock choice.  ``mode="spin"`` /
+    ``"delegate"`` run identical critical sections (bump the counter,
+    ``reads`` data accesses on the lock home) through ``DMutex``;
+    ``mode="lease"`` runs a 90/10 read/write mix through ``DRwLock``.
+    Returns ``(cluster, primitives)`` — final counter values must be
+    identical across DMutex modes (the equivalence oracle)."""
+    from repro.apps.common import zipf_keys
+    from repro.core import DMutex, DRwLock
+
+    cl = Cluster(n_servers, backend="drust")
+    boot = cl.main_thread(0)
+    if mode == "lease":
+        prims = [DRwLock(cl, boot, value=0, server=i % n_servers)
+                 for i in range(n_locks)]
+    else:
+        prims = [DMutex(cl, boot, value=0, mode=mode, server=i % n_servers)
+                 for i in range(n_locks)]
+    boot.t_us = 0.0
+    for s in cl.sim.servers:
+        s.cpu_busy_us = 0.0
+    ths = []
+    for s in range(n_servers):
+        th = cl.main_thread(0)
+        th.server = s
+        ths.append(th)
+    n_ops = n_servers * ops_per_server
+    hot = zipf_keys(n_ops, n_locks, alpha=skew, seed=seed)
+
+    def bump(o):
+        o.data += 1
+        return o.data
+
+    for i in range(n_ops):
+        th = ths[i % n_servers]
+        lk = prims[int(hot[i])]
+        if mode == "lease":
+            if i % 10 == 7:                      # 10% writers
+                lk.write(th, i)
+            else:
+                with lk.read(th):
+                    pass
+        else:
+            lk.with_lock(th, bump, reads=reads, read_bytes=256)
+    return cl, prims
+
+
+def lock_sweep_summary(server_counts=(2, 8, 64)) -> dict:
+    """Deterministic contention trajectory for ``BENCH_protocol.json``:
+    makespan within tolerance, the synchronization counters pinned
+    exactly.  The ``spin_over_delegate`` ratio in each delegate row is
+    the acceptance criterion made visible (must exceed 1.0 at 8+ servers,
+    widening with cluster size); it is derived, not gated."""
+    out: dict = {}
+    for n in server_counts:
+        for mode in ("spin", "delegate", "lease"):
+            cl, _prims = _lock_run(n, mode)
+            net = cl.sim.net
+            row = {
+                "makespan_us": round(cl.makespan_us(), 2),
+                "round_trips": net.round_trips,
+                "atomics": net.atomics,
+            }
+            if mode == "delegate":
+                row.update(
+                    delegated_sections=net.delegated_sections,
+                    convoy_completions=net.convoy_completions,
+                    closure_ships=net.closure_ships,
+                    spin_over_delegate=round(
+                        out[f"spin_{n}srv"]["makespan_us"]
+                        / max(1e-9, cl.makespan_us()), 2))
+            elif mode == "lease":
+                row.update(lease_grants=net.lease_grants,
+                           lease_revokes=net.lease_revokes)
+            out[f"{mode}_{n}srv"] = row
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -61,6 +61,11 @@ def quick(out_path: str = "BENCH_protocol.json") -> dict:
         # and goodput over the DSM-backed ServeFleet — p50/p99 higher-is-
         # worse, goodput lower-is-worse, protocol counters pinned exactly.
         "serve": protocol_micro.serve_summary(),
+        # Lock-contention trajectory (spin vs delegation vs reader leases
+        # at 2/8/64 servers under zipf skew): makespan within tolerance,
+        # synchronization counters pinned exactly.  Delegation must keep
+        # beating spin at 8+ servers (spin_over_delegate, derived).
+        "lock_sweep": protocol_micro.lock_sweep_summary(),
         "prefetch": {},
     }
     for app, fn, kw in (
@@ -120,6 +125,9 @@ def main() -> None:
         for name, meta in summary["recovery"].items():
             print(f"quick_recovery_{name},{meta['makespan_us']:.2f},"
                   f"{meta['restored_bytes']}")
+        for name, meta in summary["lock_sweep"].items():
+            print(f"quick_lock_{name},{meta['makespan_us']:.2f},"
+                  f"{meta['round_trips']}")
         for name, meta in summary["serve"].items():
             print(f"quick_serve_{name}_p99,{meta['p99_us']:.2f},"
                   f"{meta['goodput_tok_s']}")

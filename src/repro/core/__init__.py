@@ -26,13 +26,13 @@ from .protocol import (ProtocolBackend, ReadGuard, Region, WriteGuard,
                        backend_caps, backend_class)
 from .runtime import (Cluster, CoalescePolicy, DerefCoalescer,
                       GlobalController, Scheduler, Thread)
-from .sync import DAtomic, DMutex
+from .sync import DAtomic, DMutex, DRwLock
 
 __all__ = [
     "addr", "backend_caps", "backend_class", "BorrowError", "Channel",
     "Cluster", "CoalescePolicy", "ColoredAddr", "CostModel",
-    "DAtomic", "DBox", "DerefCoalescer", "DMutex", "DrustBackend",
-    "DrustRuntime", "GamBackend",
+    "DAtomic", "DBox", "DerefCoalescer", "DMutex", "DRwLock",
+    "DrustBackend", "DrustRuntime", "GamBackend",
     "GHandle", "GlobalController", "GlobalHeap", "GrappaBackend", "IOBatch",
     "LocalCache", "MutRef", "NetStats", "Obj", "OwnedState", "Partition",
     "ProtocolBackend", "ReadGuard", "RecoveryManager", "RecoveryReport",

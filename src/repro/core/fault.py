@@ -335,6 +335,7 @@ class RecoveryReport:
     dead_threads: int              # threads that died with the server
     restored_bytes: int            # partition image streamed from the backup
     makespan_us: float             # virtual time the fail-over took
+    broken_leases: int = 0         # DRwLock reader leases broken
 
 
 class RecoveryManager:
@@ -412,8 +413,13 @@ class RecoveryManager:
         # ---- 1. quiesce: dispose every orphaned cid exactly once --------
         victims = sim.wb.dispose_server(dead, th.t_us)
         for v in victims:
+            # WRITE flavors keep their kind in the ledger: "orphaned-write"
+            # (pipelined write-back, incl. the DMutex fire-and-forget
+            # unlock), "orphaned-closure" (delegated critical section that
+            # never ran), "orphaned-revoke" (lease revocation in flight).
             self._dispose(v.cid,
-                          "orphaned-read" if v.is_read else "orphaned-write")
+                          "orphaned-read" if v.is_read
+                          else f"orphaned-{v.kind}")
             sim.busy(th, cost.hashmap_us)        # ledger walk, per orphan
             if v.is_read:
                 # Speculative READ out of the dead server: route through the
@@ -501,12 +507,21 @@ class RecoveryManager:
                 lost_boxes += 1
         net.rehomed_boxes += rehomed
 
+        # Lock/lease-state reconstruction: every registered primitive
+        # (DMutex spin *and* delegate convoys, DRwLock reader leases)
+        # reconciles itself against the dead server — break locks whose
+        # holder died, drop references to closure cids the quiesce above
+        # already disposed, and break leases whose cache (or whose lease
+        # table, when the home died) is gone.  NOTE: this runs AFTER the
+        # borrow force-release loop, so a lease guard whose granting
+        # thread died must be abandoned, not closed (the borrow count was
+        # already settled there).
         broken_locks = 0
+        broken_leases = 0
         for m in getattr(cl, "mutexes", []):
-            h = m._holder
-            if h is not None and (h.tid in dead_tids or h.server == dead):
-                m.break_lock(th.t_us)            # lock-state reconstruction
-                broken_locks += 1
+            locks, leases = m.on_server_failed(dead, dead_tids, th.t_us)
+            broken_locks += locks
+            broken_leases += leases
         net.broken_locks += broken_locks
 
         # ---- 3. restripe: new membership on the completion plane --------
@@ -532,7 +547,8 @@ class RecoveryManager:
             lost_writes=lost_writes, broken_guards=broken_guards,
             released_borrows=released, broken_locks=broken_locks,
             dropped_channel_msgs=dropped_msgs, dead_threads=len(dead_ths),
-            restored_bytes=restored_bytes, makespan_us=makespan)
+            restored_bytes=restored_bytes, makespan_us=makespan,
+            broken_leases=broken_leases)
         self.reports.append(report)
         return report
 

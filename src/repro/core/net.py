@@ -185,6 +185,12 @@ class NetStats:
     speculative_fetches: int = 0        # prefetch doorbells posted off-path
     late_fences: int = 0                # fences deferred to first use
     wasted_prefetches: int = 0          # speculative entries killed unused
+    # Scalable synchronization (core/sync.py; zero on lock-free paths).
+    closure_ships: int = 0              # delegated critical sections shipped
+    convoy_completions: int = 0         # convoy-head completions polled
+    delegated_sections: int = 0         # critical sections run at the home
+    lease_grants: int = 0               # reader leases granted by a home
+    lease_revokes: int = 0              # reader leases revoked by a writer
     # Recovery (crash fail-over; all zero on the no-failure path).
     orphaned_cids: int = 0              # pending verbs disposed at fail-over
     rehomed_boxes: int = 0              # objects restored from replica/checkpoint
@@ -204,7 +210,7 @@ class NetStats:
         speculative prefetch READs are asynchronous by design and
         reported separately."""
         return (self.total_msgs() - self.async_msgs - self.async_writebacks
-                - self.speculative_fetches)
+                - self.speculative_fetches - self.closure_ships)
 
 
 @dataclass
@@ -216,6 +222,7 @@ class _Verb:
     nbytes: int
     done_us: float
     is_read: bool = False     # speculative READ (vs async write-back WRITE)
+    kind: str = "write"       # "write" | "closure" | "revoke" (WRITE flavors)
 
 
 class IOBatch:
@@ -339,8 +346,17 @@ class WritebackQueue:
         self.posted = 0
 
     # ---- post ----------------------------------------------------------
-    def post(self, th, dst_server: int, nbytes: int) -> int:
-        """Post an async WRITE; returns its completion id."""
+    def post(self, th, dst_server: int, nbytes: int,
+             kind: str = "write") -> int:
+        """Post an async WRITE; returns its completion id.
+
+        ``kind`` selects the WRITE flavor for counter purposes — identical
+        cost model, different trajectory columns: ``"write"`` is a
+        pipelined write-back (``async_writebacks``), ``"closure"`` is a
+        delegated critical section shipped to a lock home
+        (``closure_ships``, off the critical path — its completion is the
+        convoy head's), ``"revoke"`` is a lease-revocation WRITE the
+        writer fences immediately (counted on the critical path)."""
         sim, cost, net = self.sim, self.sim.cost, self.sim.net
         sim.check_reachable(th, dst_server, sync=False)
         th.t_us += cost.wb_issue_us
@@ -363,11 +379,15 @@ class WritebackQueue:
             if prior_max > done:
                 net.ooo_completions += 1
             self._tid_maxdone[tid] = max(prior_max, done)
-        self._pending[cid] = _Verb(cid, tid, dst_server, nbytes, done)
+        self._pending[cid] = _Verb(cid, tid, dst_server, nbytes, done,
+                                   kind=kind)
         self._max_cid = cid
         self.posted += 1
         net.one_sided_writes += 1
-        net.async_writebacks += 1
+        if kind == "closure":
+            net.closure_ships += 1
+        elif kind != "revoke":
+            net.async_writebacks += 1
         net.bytes_moved += nbytes
         sim.servers[sim._serve(dst_server)].bytes_in += nbytes
         sim.servers[th.server].bytes_out += nbytes
@@ -808,6 +828,36 @@ class Sim:
         serve = self._serve(dst_server)
         self.servers[serve].cpu_busy_us += proc
         self.servers[serve].msgs += 1
+
+    def ship_closure(self, th, dst_server: int, nbytes: int = 64) -> int:
+        """Ship a delegated critical-section closure (captured arguments +
+        code pointer, ~64 B) to a lock home as a doorbell-batched one-sided
+        WRITE on the completion plane.  The poster pays only the issue
+        cost — the closure's *completion* is observed when its convoy head
+        polls (``convoy_complete``), and an orphaned closure (home died
+        before running it) is disposed exactly once by the recovery
+        quiesce like any other pending verb.  Returns the completion id."""
+        return self.wb.post(th, dst_server, nbytes, kind="closure")
+
+    def convoy_complete(self, th, home_server: int, new_convoy: bool,
+                        one_sided: bool = True) -> None:
+        """Completion accounting for one delegated critical section.  The
+        *convoy head* (first waiter to arrive after the previous batch
+        drained) pays one completion poll — a one-sided READ of the result
+        slot under drust, the response half of the two-sided exchange under
+        GAM/Grappa — and one round trip; joiners ride the head's poll
+        (that is the N-waiters-one-round-trip amortization).  Latency is
+        the caller's job (``sync.py`` owns the convoy serialization
+        clock); this charges only the deterministic counters."""
+        net = self.net
+        net.delegated_sections += 1
+        if new_convoy:
+            net.convoy_completions += 1
+            net.round_trips += 1
+            if one_sided:
+                net.one_sided_reads += 1
+            else:
+                net.two_sided_msgs += 1
 
     def async_msg(self, dst_server: int, nbytes: int = 64) -> None:
         """Off-critical-path message (e.g. async dealloc, lazy invalidation)."""

@@ -249,6 +249,18 @@ class ReadGuard:
         self._value = None
         self.backend._exit_read(self.th, self.h, self._token)
 
+    def _abandon(self) -> None:
+        """Recovery-only: retire the guard WITHOUT releasing the borrow.
+        Fail-over force-releases every borrow held by a dead server's
+        threads while reconstructing lock/lease state; a later ``close()``
+        on such a guard would double-decrement a count the recovery ledger
+        already settled.  Never call outside ``core/fault.py``-driven
+        lease/lock breaking."""
+        if self._state != "open":
+            return
+        self._state = "closed"
+        self._value = None
+
     def __exit__(self, *exc):
         self.close()
         return False
@@ -314,7 +326,11 @@ class Region:
       * ``r.prefetch(handles)`` — post speculative read doorbells for the
         scope's working set (no-op on backends without safe speculation);
       * ``r.pin(handles)`` — take region-lifetime immutable borrows: the
-        payloads stay pinned in the local cache until the region exits.
+        payloads stay pinned in the local cache until the region exits;
+      * ``lease=(rwlocks...)`` — take reader leases on ``DRwLock``s up
+        front (one grant round trip each, amortized over every read this
+        server does until a writer revokes).  Unlike pins, leases *outlive*
+        the region — revocation is the writer's job, not scope exit's.
 
     Exit is a *settle point*: the thread's registered (coalesced) derefs
     flush as per-source ``read_many`` doorbells and its staged channel
@@ -324,11 +340,13 @@ class Region:
     Exceptions settle too — the scope *is* the lifetime.
     """
 
-    __slots__ = ("cluster", "th", "_pins", "_state", "_prefetch", "_pin")
+    __slots__ = ("cluster", "th", "_pins", "_state", "_prefetch", "_pin",
+                 "_lease")
 
-    def __init__(self, cluster, th, prefetch=(), pin=()):
+    def __init__(self, cluster, th, prefetch=(), pin=(), lease=()):
         self.cluster, self.th = cluster, th
         self._prefetch, self._pin = tuple(prefetch), tuple(pin)
+        self._lease = tuple(lease)
         self._pins: list[ReadGuard] = []
         self._state = "new"
 
@@ -342,6 +360,8 @@ class Region:
                 self.prefetch(self._prefetch)
             if self._pin:
                 self.pin(self._pin)
+            for rw in self._lease:
+                rw.acquire_lease(self.th)
         except BaseException:
             # The with-statement never calls __exit__ when __enter__
             # raises — release any pins already taken before propagating,

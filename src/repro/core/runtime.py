@@ -562,15 +562,17 @@ class Cluster:
         self.scheduler.threads.append(th)
         return th
 
-    def region(self, th, prefetch=(), pin=()) -> Region:
+    def region(self, th, prefetch=(), pin=(), lease=()) -> Region:
         """``with cluster.region(th) as r:`` — scoped batching region.
 
-        Entry applies the optional ``prefetch``/``pin`` hints (also
-        available as ``r.prefetch(...)`` / ``r.pin(...)`` inside the
-        scope); exit is a settle point for exactly this thread's pending
-        work — registered derefs flush as ``read_many`` doorbells, staged
-        channel sends ring, pins release (see ``protocol.Region``)."""
-        return Region(self, th, prefetch=prefetch, pin=pin)
+        Entry applies the optional ``prefetch``/``pin``/``lease`` hints
+        (prefetch/pin also available as ``r.prefetch(...)`` /
+        ``r.pin(...)`` inside the scope; ``lease`` takes reader leases on
+        ``DRwLock``s that persist past the region — see ``core/sync.py``);
+        exit is a settle point for exactly this thread's pending work —
+        registered derefs flush as ``read_many`` doorbells, staged channel
+        sends ring, pins release (see ``protocol.Region``)."""
+        return Region(self, th, prefetch=prefetch, pin=pin, lease=lease)
 
     def settle(self, th) -> None:
         """Per-thread settle point (a region exit): flush ``th``'s staged

@@ -1,10 +1,12 @@
 """Crash-consistency property suite: server failure at ANY schedule point.
 
 Random schedules interleave reads, writes (local and moving), epoch
-flushes, int8 checkpoints, speculative prefetch, ownership transfer, and
-drops over a small box population spread across 4 servers; then a server
-is crashed at an arbitrary step and failed over.  After recovery the
-invariants below must hold:
+flushes, int8 checkpoints, speculative prefetch, ownership transfer,
+drops, and synchronization ops (spin locks with fire-and-forget unlock
+verbs, delegated lock convoys, reader-lease reads/writes) over a small
+box population spread across 4 servers; then a server is crashed at an
+arbitrary step and failed over.  After recovery the invariants below
+must hold:
 
   * Epoch-Revert, Never-Resurrect: a box homed on the dead server reads
     back exactly its last *flushed* version (falling back to the last
@@ -21,6 +23,11 @@ invariants below must hold:
     threads' borrows were force-released through the per-tid ledger), the
     surviving boxes accept fresh writes and drops, and the completion
     plane fully drains.
+  * Lock-State Reconstruction: no mutex is left held by a dead thread,
+    a dead home's delegated convoy drops its closure-cid references (the
+    quiesce disposed them — exactly once, like the in-flight unlock
+    write-backs), leases never outlive their server or their home, and
+    survivors can keep locking/leasing after fail-over.
 
 Each property runs twice: hypothesis-generated (200 examples, crash point
 drawn per schedule, derandomized under the CI profile) and a seeded
@@ -37,13 +44,14 @@ import pytest
 
 from _hypcompat import given, settings, st
 
-from repro.core import Cluster, ServerLostError, addr as A
+from repro.core import Cluster, DMutex, DRwLock, ServerLostError, addr as A
 
 N_SERVERS = 4
 N_BOXES = 6
 
 KINDS = ["read", "read", "write", "write", "flush", "checkpoint",
-         "prefetch", "transfer", "drop"]
+         "prefetch", "transfer", "drop",
+         "lock", "dlock", "rwread", "rwwrite"]
 
 LOST = object()          # oracle marker: no replica, no checkpoint
 
@@ -71,10 +79,29 @@ def run_crash_schedule(ops, dead: int, crash_at: int,
     cur = [0] * N_BOXES               # latest version
     flushed = [None] * N_BOXES        # last version in the replica map
     ckpt = [None] * N_BOXES           # last version in the int8 checkpoint
+    # Synchronization plane: homes spread so a random crash exercises
+    # holder-death, home-death, and leased-cache-death cases.
+    mspin = DMutex(cl, ths[1], value=0, mode="spin", server=1)
+    mdel = DMutex(cl, ths[2], value=0, mode="delegate", server=2)
+    rw = DRwLock(cl, ths[3], value=("rw", -1), server=3)
 
     for kind, t, o, p in ops[:crash_at]:
         th, i = ths[t % N_SERVERS], o % N_BOXES
         box = boxes[i]
+        if kind == "lock":
+            # spin section; the drust unlock is a fire-and-forget WRITE
+            # on the completion plane (a cid recovery must dispose)
+            mspin.with_lock(th, lambda obj: obj)
+            continue
+        if kind == "dlock":
+            mdel.with_lock(th, lambda obj: obj, reads=1)
+            continue
+        if kind == "rwread":
+            rw.get(th)
+            continue
+        if kind == "rwwrite":
+            rw.write(th, ("rw", p))
+            continue
         if box.dropped:
             continue
         if kind == "read":
@@ -150,6 +177,23 @@ def run_crash_schedule(ops, dead: int, crash_at: int,
             assert cl.backend.read(driver, box) == ("v", i, cur[i])
             rt.drop_box(driver, box)
             assert box.dropped
+
+    # ---- lock-state reconstruction --------------------------------------
+    for m in (mspin, mdel):
+        h = m._holder
+        assert h is None or (not h.done and h.server != dead), \
+            "lock left held by a dead thread"
+    if A.server_of(A.clear_color(mdel.h.g)) == dead:
+        assert not mdel._inflight, "orphaned convoy kept closure cids"
+    for s in rw._leases:
+        assert s != dead, "lease outlived its server"
+    for m in (mspin, mdel):           # survivors keep locking
+        if cl.heap.contains(A.clear_color(m.h.g)):
+            m.with_lock(driver, lambda obj: obj)
+            assert m._holder is None
+    if not rw.h.lost and cl.heap.contains(A.clear_color(rw.h.g)):
+        rw.write(driver, ("rw", "post"))
+        assert rw.get(driver) == ("rw", "post")
     cl.sim.wb.fence_all(driver)
     assert not cl.sim.wb._pending, "completion plane leaked pending verbs"
 

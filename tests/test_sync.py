@@ -1,0 +1,529 @@
+"""Synchronization-primitive suite: DAtomic/DMutex/DRwLock (docs/sync.md).
+
+Covers the three escalating designs in ``core/sync.py`` — spin locks,
+delegation/combining locks, and reader leases — across all three protocol
+backends, plus their recovery interplay (broken convoys dispose shipped
+closures exactly once; the drust unlock is a real completion-plane verb)
+and the transactional kvstore satellites:
+
+  * value semantics: DAtomic RMW ops and DMutex critical sections behave
+    identically on drust/gam/grappa (only the verb costs differ);
+  * delegation equivalence: ``mode="delegate"`` computes the exact same
+    final counter values as ``mode="spin"`` while paying fewer round
+    trips, with the makespan gap *widening* in cluster size (8 -> 64
+    servers) — the scalable-synchronization acceptance criterion;
+  * lease safety: a hypothesis schedule suite plus a seeded deterministic
+    twin check that leased reads add zero protocol messages, at most one
+    lease exists per server, no lease survives a write (the revocation
+    fence), and every read observes the last write;
+  * recovery: a dead home breaks its convoy and lease table (reported in
+    ``RecoveryReport.broken_leases``), the orphaned closure/unlock cids
+    are disposed exactly once with kind-labeled ledger entries, and the
+    section a broken convoy shipped never ran;
+  * kvstore: non-divisor ``nodes_per_bucket`` shapes run (the floor-
+    division IndexError regression), and the multi-key transactional mix
+    produces byte-identical digests across backends, completion planes,
+    and lock modes;
+  * the bench gate: ``check_regression.compare`` trips on lock_sweep
+    makespan regressions and on exact-pin counter drift in BOTH
+    directions, and stays green on an identical run.
+"""
+
+from __future__ import annotations
+
+import copy
+import random
+
+import pytest
+
+from _hypcompat import given, settings, st
+
+from benchmarks import check_regression
+from benchmarks.protocol_micro import _lock_run
+from repro.apps.kvstore import run_kvstore
+from repro.core import (Cluster, DAtomic, DMutex, DRwLock, ServerLostError,
+                        addr as A)
+
+BACKENDS = ["drust", "gam", "grappa"]
+
+
+def _raw(h) -> int:
+    return A.clear_color(h.g) if hasattr(h, "g") else h.raw
+
+
+def _pair(backend: str, n: int = 2, **kw):
+    cl = Cluster(n, backend=backend, **kw)
+    t0 = cl.main_thread(0)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    return cl, t0, t1
+
+
+def _bump(obj):
+    obj.data += 1
+    return obj.data
+
+
+def _values(cl, prims) -> list:
+    return [cl.heap.get(_raw(p.h)).data for p in prims]
+
+
+# --------------------------------------------------------------------------
+#  Cross-backend semantics
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_datomic_semantics(backend):
+    cl, t0, t1 = _pair(backend)
+    a = DAtomic(cl, t0, init=5)
+    assert a.fetch_add(t1, 3) == 5
+    assert a.load(t0) == 8
+    assert a.cas(t1, 8, 11) and not a.cas(t1, 8, 0)
+    a.store(t0, 2)
+    assert a.load(t1) == 2
+
+
+def test_datomic_drust_uses_one_sided_atomics():
+    cl, t0, t1 = _pair("drust")
+    a = DAtomic(cl, t0, init=0)
+    at0 = cl.sim.net.atomics
+    a.fetch_add(t1)                          # remote: one-sided FAA
+    assert cl.sim.net.atomics == at0 + 1
+    at0 = cl.sim.net.atomics
+    a.fetch_add(t0 if a.home == 0 else t1)   # home-local: no verb
+    assert cl.sim.net.atomics == at0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mutex_sections_all_backends(backend):
+    cl, t0, t1 = _pair(backend)
+    m = DMutex(cl, t0, value=0, server=0)
+    assert m.with_lock(t0, _bump) == 1
+    assert m.with_lock(t1, _bump) == 2
+    assert cl.heap.get(_raw(m.h)).data == 2
+    assert m.acquisitions == 2 and m._holder is None
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mutex_explicit_lock_unlock(backend):
+    cl, t0, t1 = _pair(backend)
+    m = DMutex(cl, t0, value=10, server=0)
+    obj = m.lock(t0)
+    obj.data += 1
+    cl.sim.busy(t0, 50.0)                    # a long critical section
+    m.unlock(t0)
+    t_before = t1.t_us
+    assert m.with_lock(t1, lambda o: o.data) == 11
+    # the second acquirer serialized behind the first section's release
+    assert m.contended == 1 and t1.t_us >= 50.0 > t_before
+
+
+def test_mutex_registered_for_recovery():
+    cl, t0, _ = _pair("drust")
+    m = DMutex(cl, t0, value=0)
+    rw = DRwLock(cl, t0, value=0)
+    assert m in cl.mutexes and rw in cl.mutexes
+
+
+# --------------------------------------------------------------------------
+#  Delegation / combining locks
+# --------------------------------------------------------------------------
+def test_delegate_drust_ships_on_completion_plane():
+    cl, t0, t1 = _pair("drust")
+    m = DMutex(cl, t0, value=0, mode="delegate", server=0)
+    net = cl.sim.net
+    assert m.with_lock(t1, _bump, reads=2) == 1
+    assert net.closure_ships == 1 and net.delegated_sections == 1
+    assert net.convoy_completions == 1       # convoy head: one round trip
+    assert m.delegated == 1 and m.convoys == 1
+    assert not m._inflight                   # convoy drained
+    # the home-local caller never ships — plain section
+    assert m.with_lock(t0, _bump) == 2
+    assert net.closure_ships == 1 and m.delegated == 1
+    cl.sim.wb.fence_all(t1)
+    assert not cl.sim.wb._pending
+
+
+@pytest.mark.parametrize("backend", ["gam", "grappa"])
+def test_delegate_two_sided_transport(backend):
+    cl, t0, t1 = _pair(backend)
+    m = DMutex(cl, t0, value=0, mode="delegate", server=0)
+    net = cl.sim.net
+    two0 = net.two_sided_msgs
+    assert m.with_lock(t1, _bump, reads=1) == 1
+    # request half (the ship) + response half (the convoy completion)
+    assert net.two_sided_msgs == two0 + 2
+    assert net.closure_ships == 1 and net.delegated_sections == 1
+    assert cl.heap.get(_raw(m.h)).data == 1
+
+
+def test_delegate_raising_section_propagates_and_lock_survives():
+    cl, t0, t1 = _pair("drust")
+    m = DMutex(cl, t0, value=0, mode="delegate", server=0)
+
+    def boom(_obj):
+        raise RuntimeError("section failed")
+
+    with pytest.raises(RuntimeError):
+        m.with_lock(t1, boom)
+    assert m.with_lock(t1, _bump) == 1       # next convoy runs normally
+    cl.sim.wb.fence_all(t1)
+
+
+def test_delegation_equivalent_to_spin_and_gap_widens():
+    """The acceptance criterion: identical critical-section results, fewer
+    round trips, smaller makespan at 8+ servers — and the spin/delegate
+    makespan gap WIDENS from 8 to 64 servers under zipf(0.99) skew."""
+    gap = {}
+    for n in (8, 64):
+        cl_s, p_s = _lock_run(n, "spin")
+        cl_d, p_d = _lock_run(n, "delegate")
+        assert _values(cl_s, p_s) == _values(cl_d, p_d), \
+            "delegation changed critical-section results"
+        assert cl_d.sim.net.round_trips < cl_s.sim.net.round_trips
+        assert cl_d.makespan_us() < cl_s.makespan_us()
+        gap[n] = cl_s.makespan_us() / cl_d.makespan_us()
+    assert gap[64] > gap[8] > 1.0, f"gap did not widen: {gap}"
+
+
+def test_convoy_amortizes_round_trips():
+    """N contended waiters on one delegated lock pay ~1 amortized convoy
+    round trip; the same N spin waiters each pay serialized home RTs."""
+    for mode in ("spin", "delegate"):
+        cl = Cluster(8, backend="drust")
+        boot = cl.main_thread(0)
+        m = DMutex(cl, boot, value=0, mode=mode, server=0)
+        boot.t_us = 0.0
+        ths = []
+        for s in range(1, 8):
+            th = cl.main_thread(0)
+            th.server = s
+            ths.append(th)
+        rt0 = cl.sim.net.round_trips
+        for th in ths:
+            m.with_lock(th, _bump, reads=2)
+        if mode == "spin":
+            spin_rt = cl.sim.net.round_trips - rt0
+        else:
+            deleg_rt = cl.sim.net.round_trips - rt0
+            assert cl.heap.get(_raw(m.h)).data == 7
+    assert deleg_rt < spin_rt
+
+
+# --------------------------------------------------------------------------
+#  Recovery interplay (satellite 2 + broken convoys)
+# --------------------------------------------------------------------------
+def test_drust_unlock_is_a_real_plane_verb():
+    """Satellite-2 regression: the drust unlock posts a cid-bearing async
+    WRITE (fire-and-forget — issue cost only), retired by a fence; it is
+    no longer a bare counter bump invisible to the completion plane."""
+    cl, t0, t1 = _pair("drust", batch_io=True)
+    m = DMutex(cl, t0, value=0, server=0)
+    aw0 = cl.sim.net.async_writebacks
+    t_before = t1.t_us
+    m.lock(t1)
+    m.unlock(t1)
+    assert cl.sim.net.async_writebacks == aw0 + 1
+    assert cl.sim.wb._pending, "unlock did not ride the completion plane"
+    # fire-and-forget: the release charged issue cost, not a round trip
+    assert t1.t_us - t_before < cl.sim.cost.one_sided_base_us * 2
+    cl.sim.wb.fence_all(t1)
+    assert not cl.sim.wb._pending
+
+
+def test_orphaned_unlock_disposed_exactly_once():
+    """An unlock WRITE in flight to a home that then dies is disposed by
+    the recovery quiesce exactly once, labeled with its verb kind."""
+    cl, t0, t1 = _pair("drust", n=2, replicate=True, batch_io=True)
+    m = DMutex(cl, t0, value=0, server=0)
+    m.lock(t1)
+    m.unlock(t1)
+    cid = cl.sim.wb._max_cid                 # the unlock's completion id
+    assert cid in cl.sim.wb._pending
+    cl.recovery.crash(0)
+    cl.recovery.fail_over(0, t1)
+    assert cl.recovery.disposed[cid] == "orphaned-write"
+    assert cid not in cl.sim.wb._pending
+    with pytest.raises(RuntimeError):        # the exactly-once ledger
+        cl.recovery._dispose(cid, "orphaned-write")
+
+
+def test_broken_convoy_disposes_closure_exactly_once():
+    """A closure shipped to an unresponsive home never runs (no partial
+    state), its cid is disposed exactly once as ``orphaned-closure``, and
+    recovery clears the convoy's cid references and breaks the lock."""
+    cl, t0, t1 = _pair("drust", n=2, replicate=True, batch_io=True)
+    m = DMutex(cl, t0, value=0, mode="delegate", server=0)
+    cl.replicator.flush_epoch()
+    cl.sim.mark_failing(0)                   # unresponsive, not yet declared
+    with pytest.raises(ServerLostError):
+        m.with_lock(t1, _bump, reads=1)      # retry ladder burns, then raises
+    assert len(m._inflight) == 1, "ship should be pending, section aborted"
+    cid = m._inflight[0]
+    cl.recovery.crash(0)
+    cl.recovery.fail_over(0, t1)
+    assert cl.recovery.disposed[cid] == "orphaned-closure"
+    assert not m._inflight and m.broken == 1
+    assert cl.heap.get(_raw(m.h)).data == 0, "aborted section mutated state"
+    with pytest.raises(RuntimeError):
+        cl.recovery._dispose(cid, "orphaned-closure")
+
+
+def test_crashed_holder_breaks_lock_and_survivor_reacquires():
+    cl = Cluster(3, backend="drust", replicate=True)
+    t0 = cl.main_thread(0)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    m = DMutex(cl, t0, value=0, server=0)
+    cl.replicator.flush_epoch()
+    m.lock(t1)                               # holder on server 1 ...
+    cl.recovery.crash(1)                     # ... dies mid-section
+    rep = cl.recovery.fail_over(1, t0)
+    assert rep.broken_locks >= 1 and m.broken == 1 and m._holder is None
+    assert m.with_lock(t0, _bump) == 1       # survivor proceeds
+
+
+# --------------------------------------------------------------------------
+#  Reader leases (DRwLock)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lease_grant_once_then_zero_verbs(backend):
+    cl, t0, t1 = _pair(backend)
+    rw = DRwLock(cl, t0, value=("v", 0), server=0)
+    net = cl.sim.net
+    assert rw.get(t1) == ("v", 0)            # cold: the grant's fetch
+    assert t1.server in rw._leases and net.lease_grants == 1
+    rt0, m0 = net.round_trips, net.critical_path_msgs()
+    for _ in range(8):                       # warm: pure local chases
+        assert rw.get(t1) == ("v", 0)
+    assert net.round_trips == rt0 and net.critical_path_msgs() == m0, \
+        "leased reads must add zero protocol messages"
+    assert net.lease_grants == 1             # still the one lease
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_write_revokes_fences_and_regrants(backend):
+    cl, t0, t1 = _pair(backend)
+    rw = DRwLock(cl, t0, value=("v", 0), server=0)
+    rw.get(t1)
+    net = cl.sim.net
+    rw.write(t0, ("v", 1))
+    assert not rw._leases, "a lease survived the write"
+    assert net.lease_revokes == 1 and rw.writes == 1
+    assert rw.get(t1) == ("v", 1), "reader observed pre-revocation state"
+    assert net.lease_grants == 2             # re-granted after the write
+
+
+def test_drust_revocation_rides_the_fence():
+    cl = Cluster(3, backend="drust", batch_io=True)
+    t0 = cl.main_thread(0)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    t2 = cl.main_thread(0)
+    t2.server = 2
+    rw = DRwLock(cl, t0, value=0, server=0)
+    rw.get(t1)
+    rw.get(t2)
+    net = cl.sim.net
+    f0, rt0 = net.fences, net.round_trips
+    rw.write(t0, 1)
+    assert net.fences == f0 + 1, "revocation skipped the cid fence"
+    assert net.round_trips == rt0 + 1        # one completion poll, not N
+    assert net.lease_revokes == 2
+
+
+def test_scoped_read_and_region_lease_hint():
+    cl, t0, t1 = _pair("drust")
+    rw = DRwLock(cl, t0, value=("v", 7), server=0)
+    with rw.read(t1) as v:
+        assert v == ("v", 7)
+    assert t1.server in rw._leases           # the lease outlives the scope
+    rw2 = DRwLock(cl, t0, value=("w", 1), server=0)
+    with cl.region(t1, lease=(rw2,)):
+        assert t1.server in rw2._leases      # granted eagerly at entry
+        rt0 = cl.sim.net.round_trips
+        assert rw2.get(t1) == ("w", 1)
+        assert cl.sim.net.round_trips == rt0
+    assert t1.server in rw2._leases          # and persists past the region
+
+
+def test_rwlock_home_follows_a_moving_write():
+    """A remote writer's WriteGuard MOVES the value under drust — the
+    lease table's home must follow the handle, not the birth partition."""
+    cl, t0, t1 = _pair("drust")
+    rw = DRwLock(cl, t0, value=0, server=0)
+    assert rw.home == 0
+    rw.write(t1, 1)
+    assert rw.home == t1.server
+    assert rw.get(t0) == 1
+
+
+# ---- lease schedule property + seeded twin -------------------------------
+def _run_lease_schedule(ops) -> None:
+    """Oracle: every read observes the LAST write.  Invariants: at most one
+    lease per server, no lease survives a write, leased reads add zero
+    protocol messages."""
+    cl = Cluster(4, backend="drust")
+    ths = []
+    for s in range(4):
+        th = cl.main_thread(0)
+        th.server = s
+        ths.append(th)
+    rw = DRwLock(cl, ths[0], value=("w", -1), server=3)
+    net = cl.sim.net
+    last = ("w", -1)
+    for kind, t, p in ops:
+        th = ths[t % 4]
+        if kind == "write":
+            last = ("w", p)
+            rw.write(th, last)
+            assert not rw._leases, "lease survived a write"
+        else:
+            leased = th.server in rw._leases
+            rt0, m0 = net.round_trips, net.critical_path_msgs()
+            assert rw.get(th) == last, "stale read"
+            if leased:
+                assert (net.round_trips, net.critical_path_msgs()) == (rt0, m0)
+        assert len(rw._leases) <= 4
+        assert len(set(rw._leases)) == len(rw._leases)
+    for th in ths:                           # final audit from every server
+        assert rw.get(th) == last
+    cl.sim.wb.fence_all(ths[0])
+    assert not cl.sim.wb._pending
+
+
+lease_ops = st.lists(
+    st.tuples(st.sampled_from(["read", "read", "read", "write"]),
+              st.integers(0, 3), st.integers(0, 99)),
+    min_size=0, max_size=12)
+
+
+@settings(max_examples=200, deadline=None)
+@given(lease_ops)
+def test_lease_schedule_property(ops):
+    _run_lease_schedule(ops)
+
+
+def test_lease_schedules_200_seeded():
+    rng = random.Random(13)
+    for _ in range(200):
+        ops = [(rng.choice(["read", "read", "read", "write"]),
+                rng.randrange(4), rng.randrange(100))
+               for _ in range(rng.randint(0, 12))]
+        _run_lease_schedule(ops)
+
+
+def test_rwlock_recovery_breaks_leases():
+    """A dead home breaks its whole lease table; a dead leased cache
+    breaks only its own lease.  Both surface in ``broken_leases`` and
+    survivors re-grant against the restored value."""
+    cl = Cluster(4, backend="drust", replicate=True)
+    ths = []
+    for s in range(4):
+        th = cl.main_thread(0)
+        th.server = s
+        ths.append(th)
+    rw_home = DRwLock(cl, ths[1], value=("a", 0), server=1)   # home dies
+    rw_cache = DRwLock(cl, ths[0], value=("b", 0), server=0)  # a lease dies
+    cl.replicator.flush_epoch()
+    for th in (ths[0], ths[2], ths[3]):
+        rw_home.get(th)
+    rw_cache.get(ths[1])
+    rw_cache.get(ths[2])
+    cl.recovery.crash(1)
+    rep = cl.recovery.fail_over(1, ths[0])
+    assert rep.broken_leases == 4            # 3 home-death + 1 cache-death
+    assert rw_home.broken == 1 and rw_home.broken_leases == 3
+    assert not rw_home._leases
+    assert 1 not in rw_cache._leases and 2 in rw_cache._leases
+    assert rw_home.get(ths[0]) == ("a", 0)   # re-grant vs restored value
+    assert rw_cache.get(ths[3]) == ("b", 0)
+
+
+# --------------------------------------------------------------------------
+#  kvstore satellites
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("npb", [3, 5, 7])
+def test_kvstore_non_divisor_bucket_shapes(npb):
+    """Regression for the floor-division bucket-count bug: any key's
+    bucket must exist even when nodes_per_bucket does not divide n_keys
+    (the old math raised IndexError on the tail keys)."""
+    r = run_kvstore(3, "drust", n_keys=64, n_ops=150, nodes_per_bucket=npb)
+    assert r.ops == 150 and r.makespan_us > 0
+
+
+def test_kvstore_tail_key_lands_in_last_bucket():
+    r = run_kvstore(2, "drust", n_keys=7, n_ops=80, nodes_per_bucket=3)
+    assert r.ops == 80
+
+
+def test_kvstore_txn_digest_identical_everywhere():
+    """The transactional oracle: multi-key atomic updates produce a byte-
+    identical store digest across all three backends, both completion
+    planes, and both lock modes."""
+    kw = dict(n_keys=96, value_bytes=64, n_ops=240, nodes_per_bucket=3,
+              txn_frac=0.3)
+    digests = set()
+    runs = 0
+    for backend in BACKENDS:
+        for ooo in (False, True):
+            r = run_kvstore(2, backend, ooo=ooo, **kw)
+            assert r.extra["txn_ops"] > 0
+            digests.add(r.extra["digest"])
+            runs += 1
+    r = run_kvstore(2, "drust", lock_mode="delegate", **kw)
+    digests.add(r.extra["digest"])
+    assert len(digests) == 1, f"{runs + 1} runs produced {len(digests)} digests"
+
+
+def test_kvstore_txn_frac_zero_replays_legacy_stream():
+    a = run_kvstore(2, "drust", n_keys=64, n_ops=150)
+    b = run_kvstore(2, "drust", n_keys=64, n_ops=150, txn_frac=0.0)
+    assert a.extra["digest"] == b.extra["digest"]
+    assert a.net["round_trips"] == b.net["round_trips"]
+    assert b.extra["txn_ops"] == 0
+
+
+# --------------------------------------------------------------------------
+#  The lock_sweep bench gate trips in both directions
+# --------------------------------------------------------------------------
+_LOCK_BASE = {
+    "lock_sweep": {
+        "spin_8srv": {"makespan_us": 100.0, "round_trips": 50, "atomics": 10},
+        "delegate_8srv": {"makespan_us": 60.0, "round_trips": 20,
+                          "atomics": 0, "delegated_sections": 30,
+                          "convoy_completions": 5, "closure_ships": 30,
+                          "spin_over_delegate": 1.67},
+    }
+}
+
+
+def test_lock_gate_green_on_identical_run():
+    cur = copy.deepcopy(_LOCK_BASE)
+    assert check_regression.compare(_LOCK_BASE, cur, 0.10) == []
+    # derived ratios are visible but not gated
+    cur["lock_sweep"]["delegate_8srv"]["spin_over_delegate"] = 9.99
+    assert check_regression.compare(_LOCK_BASE, cur, 0.10) == []
+
+
+def test_lock_gate_trips_on_makespan_regression():
+    cur = copy.deepcopy(_LOCK_BASE)
+    cur["lock_sweep"]["delegate_8srv"]["makespan_us"] = 72.0   # +20%
+    fails = check_regression.compare(_LOCK_BASE, cur, 0.10)
+    assert any("lock_sweep/delegate_8srv/makespan_us" in f for f in fails)
+
+
+@pytest.mark.parametrize("delta", [-1, +1])
+def test_lock_gate_trips_on_counter_drift_both_directions(delta):
+    cur = copy.deepcopy(_LOCK_BASE)
+    cur["lock_sweep"]["delegate_8srv"]["delegated_sections"] += delta
+    cur["lock_sweep"]["spin_8srv"]["round_trips"] += delta
+    fails = check_regression.compare(_LOCK_BASE, cur, 0.10)
+    assert any("delegated_sections" in f for f in fails)
+    assert any("spin_8srv/round_trips" in f for f in fails)
+
+
+def test_lock_gate_trips_on_missing_row():
+    cur = copy.deepcopy(_LOCK_BASE)
+    del cur["lock_sweep"]["delegate_8srv"]
+    fails = check_regression.compare(_LOCK_BASE, cur, 0.10)
+    assert any("delegate_8srv: missing" in f for f in fails)
