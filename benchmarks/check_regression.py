@@ -37,6 +37,14 @@ sweeps) and compares the *deterministic* metrics against the committed
     ``closure_ships``, ``lease_grants``, ``lease_revokes``) pinned
     exactly — delegation's amortized-convoy advantage over spin is held
     by the makespan gate on both rows;
+  * the placement sweep (``placement_sweep``, see ``docs/placement.md``):
+    static spread/packed layouts vs telemetry-driven live owner migration
+    on the zipf-skewed apps at 2-64 servers — makespans within tolerance,
+    the placement counters (``round_trips``, ``owner_migrations``,
+    ``migration_round_trips``, ``quantum_merges``) pinned exactly in BOTH
+    directions, and each committed ``auto_beats_static`` acceptance bool
+    (auto strictly under the best static on makespan AND round trips at
+    8+ servers, with identical digests) may never flip to false;
   * the serving SLOs (``serve``, see ``docs/serving.md``): open-loop
     p50/p99 tail latency within tolerance in the *upward* direction,
     goodput within tolerance in the *downward* direction, and the
@@ -75,6 +83,8 @@ RECOVERY_EXACT = ("restored_bytes", "rehomed_boxes", "orphaned_cids",
 LOCK_EXACT = ("round_trips", "atomics", "delegated_sections",
               "convoy_completions", "closure_ships", "lease_grants",
               "lease_revokes")
+PLACEMENT_EXACT = ("round_trips", "owner_migrations", "migration_round_trips",
+                   "quantum_merges")
 # Serving SLO columns (open-loop sweep): tail latency regresses UPWARD,
 # goodput regresses DOWNWARD — both gated within tolerance; the protocol
 # counters underneath are deterministic and pinned exactly.
@@ -137,7 +147,8 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
     for section, exact in (("coalesce_sweep", COALESCE_EXACT),
                            ("prefetch", PREFETCH_EXACT),
                            ("recovery", RECOVERY_EXACT),
-                           ("lock_sweep", LOCK_EXACT)):
+                           ("lock_sweep", LOCK_EXACT),
+                           ("placement_sweep", PLACEMENT_EXACT)):
         for name, base_entry in sorted(baseline.get(section, {}).items()):
             cur_entry = current.get(section, {}).get(name)
             if cur_entry is None:
@@ -190,6 +201,25 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
                     f"serve/{name}/{metric}: {cur_entry.get(metric)} != "
                     f"baseline {base_entry[metric]} (deterministic counter, "
                     f"pinned exactly)")
+    # Placement acceptance: each auto row whose committed baseline says
+    # live migration strictly beats the best static layout (makespan AND
+    # round trips, identical digests) must keep saying so — the bool may
+    # never flip to false.  Exact-counter pins above already catch drift
+    # in BOTH directions; this catches a current run whose fresh
+    # trajectory no longer wins.
+    for name, base_entry in sorted(baseline.get("placement_sweep", {}).items()):
+        if not base_entry.get("auto_beats_static"):
+            continue
+        cur_entry = current.get("placement_sweep", {}).get(name)
+        if cur_entry is None:
+            continue                       # already reported missing above
+        if not cur_entry.get("auto_beats_static"):
+            failures.append(
+                f"placement_sweep/{name}: auto_beats_static flipped false — "
+                f"auto {cur_entry.get('makespan_us')}us/"
+                f"{cur_entry.get('round_trips')}rt vs best static "
+                f"{cur_entry.get('best_static_makespan_us')}us/"
+                f"{cur_entry.get('best_static_round_trips')}rt")
     # Recovery SLO: not a counter comparison — the committed baseline says
     # working-set scaling dominates cluster-size scaling, and it must stay
     # that way on the current run (schema has no makespan_us, so it stays
@@ -254,6 +284,10 @@ def main(argv=None) -> int:
     n_gated += len(baseline.get("prefetch", {})) * (1 + len(PREFETCH_EXACT))
     n_gated += len(baseline.get("recovery", {})) * (1 + len(RECOVERY_EXACT))
     n_gated += len(baseline.get("lock_sweep", {})) * (1 + len(LOCK_EXACT))
+    n_gated += len(baseline.get("placement_sweep", {})) * (
+        1 + len(PLACEMENT_EXACT))
+    n_gated += sum(1 for v in baseline.get("placement_sweep", {}).values()
+                   if v.get("auto_beats_static"))
     n_gated += len(baseline.get("serve", {})) * (
         len(SERVE_WORSE_UP) + len(SERVE_WORSE_DOWN) + len(SERVE_EXACT))
     n_gated += 1 if baseline.get("recovery_slo", {}).get("slo_ok") else 0

@@ -493,6 +493,74 @@ def lock_sweep_summary(server_counts=(2, 8, 64)) -> dict:
 
 
 # --------------------------------------------------------------------------
+#  Placement sweep (static layouts vs telemetry-driven live migration)
+# --------------------------------------------------------------------------
+def _placement_run(n_servers: int, mode: str, app: str):
+    """One zipf-skewed phase-rotating run (``apps.common.run_skewed_phases``)
+    of a skewed app under one placement mode.  ``spread``/``packed`` are
+    static layouts on the byte-identical default plane; ``auto`` installs
+    the telemetry tracker (``core/runtime.PlacementTracker``) and lets hot
+    objects migrate to their phase-dominant reader.  Returns the
+    ``AppResult`` — the payload digest folds every value read in schedule
+    order, so all three modes must produce the same digest."""
+    from repro.apps.dataframe import run_dataframe
+    from repro.apps.socialnet import run_socialnet
+
+    if app == "socialnet":
+        return run_socialnet(n_servers, "drust", n_requests=1200,
+                             placement=mode, skew=0.99)
+    return run_dataframe(n_servers, "drust", n_ops=38,
+                         placement=mode, skew=0.99)
+
+
+PLACEMENT_SIZES = (2, 8, 16, 64)
+PLACEMENT_GATED_SIZES = (8, 16, 64)    # auto must strictly win here
+
+
+def placement_summary(server_counts=PLACEMENT_SIZES) -> dict:
+    """Deterministic placement trajectory for ``BENCH_protocol.json``:
+    makespan within tolerance, the placement counters (round trips, owner
+    migrations, migration round trips, quantum merges) pinned exactly.
+    Each ``auto`` row carries the best static layout's makespan/round
+    trips and the ``auto_beats_static`` acceptance bool (strict win on
+    BOTH at 8+ servers, with identical digests) that the gate must not
+    see flip to false."""
+    out: dict = {}
+    for app in ("socialnet", "dataframe"):
+        for n in server_counts:
+            static = {}
+            for mode in ("spread", "packed", "auto"):
+                res = _placement_run(n, mode, app)
+                net = res.net
+                digest = res.extra.get("payload_digest",
+                                       res.extra.get("result_digest"))
+                row = {
+                    "makespan_us": round(res.makespan_us, 2),
+                    "round_trips": net["round_trips"],
+                    "owner_migrations": net["owner_migrations"],
+                    "migration_round_trips": net["migration_round_trips"],
+                    "quantum_merges": net["quantum_merges"],
+                    "digest": digest,
+                }
+                if mode == "auto":
+                    best_span = min(v["makespan_us"] for v in static.values())
+                    best_rts = min(v["round_trips"] for v in static.values())
+                    row.update(
+                        best_static_makespan_us=best_span,
+                        best_static_round_trips=best_rts,
+                        auto_beats_static=bool(
+                            n not in PLACEMENT_GATED_SIZES
+                            or (res.makespan_us < best_span
+                                and net["round_trips"] < best_rts
+                                and all(v["digest"] == digest
+                                        for v in static.values()))))
+                else:
+                    static[mode] = row
+                out[f"{app}_{mode}_{n}srv"] = row
+    return out
+
+
+# --------------------------------------------------------------------------
 #  Serving SLO sweep (open-loop tail latency + goodput)
 # --------------------------------------------------------------------------
 SERVE_SLO_US = 5000.0        # per-request latency SLO (arrival -> last token)

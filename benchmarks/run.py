@@ -66,6 +66,13 @@ def quick(out_path: str = "BENCH_protocol.json") -> dict:
         # synchronization counters pinned exactly.  Delegation must keep
         # beating spin at 8+ servers (spin_over_delegate, derived).
         "lock_sweep": protocol_micro.lock_sweep_summary(),
+        # Placement trajectory (static spread/packed layouts vs telemetry-
+        # driven live owner migration on the zipf-skewed apps at 2-64
+        # servers): makespan within tolerance, placement counters pinned
+        # exactly.  Each auto row's auto_beats_static bool (strict win on
+        # makespan AND round trips at 8+ servers, identical digests) is
+        # gated and must not flip false.
+        "placement_sweep": protocol_micro.placement_summary(),
         "prefetch": {},
     }
     for app, fn, kw in (
@@ -131,6 +138,9 @@ def main() -> None:
         for name, meta in summary["serve"].items():
             print(f"quick_serve_{name}_p99,{meta['p99_us']:.2f},"
                   f"{meta['goodput_tok_s']}")
+        for name, meta in summary["placement_sweep"].items():
+            print(f"quick_placement_{name},{meta['makespan_us']:.2f},"
+                  f"{meta['round_trips']}")
         slo = summary["recovery_slo"]
         print(f"quick_recovery_slo_ok,0.00,{slo['slo_ok']}")
         print("wrote BENCH_protocol.json", file=sys.stderr)

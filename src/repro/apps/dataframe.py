@@ -35,8 +35,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import addr as A, backend_caps
-from .common import AppResult, make_cluster, spread_threads
+from repro.core import backend_caps
+from .common import (AppResult, hot_layout_server, make_cluster,
+                     placement_cluster_kw, run_skewed_phases, spread_threads)
 
 CYCLES_PER_BYTE = 110.13
 SIMD_LANES = 8                    # AVX2 over f64 rows
@@ -49,19 +50,51 @@ def run_dataframe(n_servers: int, backend: str = "drust",
                   cores: int = 16, use_tbox: bool = False,
                   use_spawn_to: bool = False, batch_io: bool = True,
                   coalesce: str = "auto", qps_per_thread: int = 1,
-                  ooo: bool = False, cost=None, seed: int = 0) -> AppResult:
+                  ooo: bool = False, cost=None, seed: int = 0,
+                  placement: str = "static",
+                  skew: float | None = None) -> AppResult:
     caps = backend_caps(backend)
     use_tbox = use_tbox and caps.supports_affinity
     use_spawn_to = use_spawn_to and caps.supports_affinity
     auto = coalesce == "auto" and caps.supports_coalescing and batch_io
     cl = make_cluster(n_servers, backend, cores, batch_io=batch_io,
                       qps_per_thread=qps_per_thread, ooo=ooo, cost=cost,
-                      coalesce="auto" if auto else "manual")
+                      coalesce="auto" if auto else "manual",
+                      **placement_cluster_kw(placement))
     rng = np.random.default_rng(seed)
     chunk_bytes = chunk_rows * 8
     chunk_cycles = CYCLES_PER_BYTE * chunk_bytes / SIMD_LANES
 
     boot = cl.main_thread(0)
+
+    if skew is not None:
+        # Zipf-skewed hot-partition mix (the placement_sweep workload):
+        # each hot item is a small index entry with a TBox-tied chunk
+        # behind it, so a migration moves the whole affinity group as one
+        # closure — see ``common.run_skewed_phases``.
+        # Fixed-size hot partition set: skew concentrates on the same few
+        # groups regardless of cluster size.
+        hot_groups = 8
+        hot = []
+        for j in range(hot_groups):
+            root = cl.backend.alloc(boot, 64, (j, 0),
+                                    server=hot_layout_server(
+                                        placement, j, n_servers))
+            if caps.supports_affinity:
+                cl.backend.alloc(boot, chunk_bytes, None, tie_to=root)
+            hot.append(root)
+        boot.t_us = 0.0
+        for s in cl.sim.servers:
+            s.cpu_busy_us = 0.0
+        ths = spread_threads(cl, workers_per_server)
+        digest, ops = run_skewed_phases(
+            cl, ths, hot, alpha=skew, seed=seed,
+            accesses_per_phase=max(1, n_ops * chunks_per_column // 6))
+        span = cl.makespan_us()
+        return AppResult("dataframe", backend, n_servers, ops, span,
+                         net=cl.sim.snapshot()["net"],
+                         extra={"placement": placement, "skew": skew,
+                                "result_digest": digest})
     columns = []                    # column -> list of chunk handles
     for c in range(n_columns):
         prev = None
@@ -107,7 +140,9 @@ def run_dataframe(n_servers: int, backend: str = "drust",
                 slot.set(srcs)
             ops += 1
             if use_spawn_to:
-                data_srv = A.server_of(col[k].g)
+                # current owner location (tracks transfers/write-moves),
+                # not the allocation-time home
+                data_srv = cl.backend.locate(col[k])
                 cand = [t for t in ths if t.server == data_srv]
                 th = min(cand, key=lambda t: t.t_us) if cand \
                     else ths[(w + len(ths) // 2) % len(ths)]

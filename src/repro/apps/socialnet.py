@@ -32,7 +32,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import Channel, backend_caps
-from .common import AppResult, make_cluster, spread_threads
+from .common import (AppResult, hot_layout_server, make_cluster,
+                     placement_cluster_kw, run_skewed_phases, spread_threads)
 
 TEXT_BYTES = 1024
 MEDIA_BYTES = 50 * 1024
@@ -55,16 +56,43 @@ def run_socialnet(n_servers: int, backend: str = "drust",
                   workers_per_server: int = 4, cores: int = 16,
                   by_value: bool = False, batch_io: bool = True,
                   coalesce: str = "auto", qps_per_thread: int = 1,
-                  ooo: bool = False, cost=None, seed: int = 0) -> AppResult:
+                  ooo: bool = False, cost=None, seed: int = 0,
+                  placement: str = "static",
+                  skew: float | None = None) -> AppResult:
     # The runtime deref coalescer needs ownership borrows + the batched
     # plane; every other configuration runs the manual choreography.
     auto = (coalesce == "auto" and backend_caps(backend).supports_coalescing
             and batch_io and not by_value)
     cl = make_cluster(n_servers, backend, cores, batch_io=batch_io,
                       qps_per_thread=qps_per_thread, ooo=ooo, cost=cost,
-                      coalesce="auto" if auto else "manual")
+                      coalesce="auto" if auto else "manual",
+                      **placement_cluster_kw(placement))
     rng = np.random.default_rng(seed)
     boot = cl.main_thread(0)
+
+    if skew is not None:
+        # Zipf-skewed hot-profile mix (the placement_sweep workload): a
+        # small set of hot user profiles updated by movable compose
+        # workers and read mostly by one phase-dominant timeline service
+        # per phase — see ``common.run_skewed_phases``.
+        # A fixed-size hot set: the skew is the workload's point — a
+        # bigger cluster does not mint more celebrities, it just puts
+        # more distance between them and their readers.
+        hot_profiles = 8
+        hot = [cl.backend.alloc(boot, TEXT_BYTES, (j, 0),
+                                server=hot_layout_server(
+                                    placement, j, n_servers))
+               for j in range(hot_profiles)]
+        boot.t_us = 0.0
+        ths = spread_threads(cl, workers_per_server)
+        digest, ops = run_skewed_phases(
+            cl, ths, hot, alpha=skew, seed=seed,
+            accesses_per_phase=max(1, n_requests // 6))
+        span = cl.makespan_us()
+        return AppResult("socialnet", backend, n_servers, ops, span,
+                         net=cl.sim.snapshot()["net"],
+                         extra={"placement": placement, "skew": skew,
+                                "payload_digest": digest})
 
     ths = spread_threads(cl, workers_per_server)
     n_stages = 4                                   # compose→text→media→storage

@@ -352,6 +352,8 @@ class RecoveryManager:
         self.disposed: dict[int, str] = {}       # cid -> disposition
         self.reports: list[RecoveryReport] = []
         self._dead_threads: dict[int, list] = {}  # server -> threads that died
+        self.quiescing = False   # True inside fail_over: placement migration
+        #                          is suppressed while cids are being disposed
 
     # -- exactly-once ledger ---------------------------------------------
     def _dispose(self, cid: int, how: str) -> None:
@@ -409,6 +411,7 @@ class RecoveryManager:
         if dead not in sim.failed:
             sim.declare_failed(dead)
         t0 = th.t_us
+        self.quiescing = True    # placement migration pauses until recovered
 
         # ---- 1. quiesce: dispose every orphaned cid exactly once --------
         victims = sim.wb.dispose_server(dead, th.t_us)
@@ -550,6 +553,7 @@ class RecoveryManager:
             restored_bytes=restored_bytes, makespan_us=makespan,
             broken_leases=broken_leases)
         self.reports.append(report)
+        self.quiescing = False
         return report
 
     def fail_and_recover(self, server: int, th=None) -> RecoveryReport:

@@ -185,6 +185,11 @@ class NetStats:
     speculative_fetches: int = 0        # prefetch doorbells posted off-path
     late_fences: int = 0                # fences deferred to first use
     wasted_prefetches: int = 0          # speculative entries killed unused
+    # Telemetry-driven placement (core/runtime.py PlacementTracker; all
+    # zero under placement="static", the default).
+    owner_migrations: int = 0           # hot-accessor ownership pulls
+    migration_round_trips: int = 0      # round trips spent inside those pulls
+    quantum_merges: int = 0             # sibling derefs merged into one flush
     # Scalable synchronization (core/sync.py; zero on lock-free paths).
     closure_ships: int = 0              # delegated critical sections shipped
     convoy_completions: int = 0         # convoy-head completions polled

@@ -114,7 +114,7 @@ class DBox:
 
     __slots__ = ("g", "l", "u", "home", "rt", "live_refs", "live_mut",
                  "dropped", "tied", "wb_cids", "fetch_cid", "fetch_server",
-                 "lost", "mut_broken", "mut_tid", "ref_tids")
+                 "lost", "mut_broken", "mut_tid", "ref_tids", "site")
 
     def __init__(self, rt: "DrustRuntime", g: int, home: int, tied: bool = False):
         self.rt = rt
@@ -136,6 +136,11 @@ class DBox:
         #   ServerLostError and releases without write-back
         self.mut_tid: int | None = None   # tid holding the mutable borrow
         self.ref_tids: dict[int, int] = {}  # tid -> live read borrows held
+        # Placement override: the server a ``transfer`` shipped the owner
+        # to.  None = the payload location (``server_of(g)``) is the
+        # placement target; any payload relocation clears the override —
+        # the data caught up with (or overtook) the pointer.
+        self.site: int | None = None
 
     def __repr__(self):
         return (f"DBox(g={A.clear_color(self.g):#x}c{A.get_color(self.g)}, "
@@ -591,6 +596,7 @@ class DrustRuntime(ProtocolBackend):
                 self.obj_color[new_raw] = A.get_color(box.g)
                 box.g = A.append_color(new_raw, A.get_color(box.g))
                 box.u = True
+                box.site = None        # adopted copy: payload relocated
             box.l = A.NULL
             self._mirror_color(box.g)
         sim.local_access(th)
@@ -698,8 +704,80 @@ class DrustRuntime(ProtocolBackend):
             self.sim.wb.fence(th_src, upto)
         self.sim.rpc(th_src, dst_server, req_bytes=16)   # ship the pointer
         box.home = dst_server
+        box.site = dst_server          # data-affinity now follows the owner
         # ... and flush batched write-backs to the backup partition now.
         self.on_transfer(A.clear_color(box.g))
+
+    # ---- placement (telemetry-driven; see core/runtime.py) ---------------
+    def locate(self, box: DBox) -> int:
+        """Current data-affinity target: a ``transfer``'s destination while
+        the payload has not caught up (``site``), else the payload's server
+        — ``g`` is rewritten on every write-move, so this tracks live
+        relocations that the allocation-time home does not."""
+        if box.site is not None:
+            return box.site
+        return A.server_of(box.g)
+
+    def placement_root(self, box: DBox) -> DBox:
+        """The owner a placement decision actually moves: a TBox child
+        migrates with (and its accesses count toward) its tie root, so the
+        affinity group always moves as one closure."""
+        raw = A.clear_color(box.g)
+        seen: set[int] = set()
+        while raw in self.tie_parent and raw not in seen:
+            seen.add(raw)
+            raw = self.tie_parent[raw]
+        root = self.owner_of.get(raw)
+        return root if root is not None else box
+
+    def migrate_here(self, th, box: DBox) -> bool:
+        """Live owner migration (placement subsystem): relocate ``box``'s
+        payload — with its whole TBox closure, batched as one move — into
+        ``th.server``'s partition and re-home the owner pointer there.
+
+        Same synchronization discipline as ``transfer``: registered derefs
+        flush first, the move is refused while any borrow in the closure
+        is live, and exactly the write-back / speculative completion ids
+        the closure depends on are fenced.  The *accessing* thread pays
+        the move (hot-accessor pull).  Returns False when the migration is
+        suppressed or unnecessary."""
+        if box.dropped or box.lost or box.mut_broken:
+            return False
+        box = self.placement_root(box)   # a TBox child moves with its root
+        if box.dropped or box.lost or box.mut_broken:
+            return False
+        raw = A.clear_color(box.g)
+        if not self.heap.contains(raw):
+            return False
+        if A.server_of(box.g) == th.server:
+            box.site = None            # payload already local: drop override
+            return False
+        self._coalesce_conflict(box)
+        owners = [box]
+        for a in self._group(raw):
+            child = self.owner_of.get(a)
+            if child is not None and child is not box:
+                owners.append(child)
+        if any(b.live_mut or b.live_refs for b in owners):
+            return False               # suppressed: a borrow is live
+        net = self.sim.net
+        rt0 = net.round_trips
+        upto = max(self._take_wb_deps(box), self._take_spec_deps(box))
+        if upto:
+            self.sim.wb.fence(th, upto)
+        box._release_pin()
+        new_raw = self._move_in(th, box.g)
+        box.g = A.append_color(new_raw, A.get_color(box.g))
+        self._mirror_color(box.g)
+        box.l = A.NULL
+        if box.home != th.server:      # pointer re-home control message
+            self.sim.rpc(th, box.home, req_bytes=16)
+        box.home = th.server
+        box.site = None
+        self.on_transfer(new_raw)      # replica epoch follows the owner
+        net.owner_migrations += 1
+        net.migration_round_trips += net.round_trips - rt0
+        return True
 
     # ---- internals ---------------------------------------------------------
     def _take_wb_deps(self, box: DBox) -> int:
@@ -967,6 +1045,8 @@ class DrustRuntime(ProtocolBackend):
             self.owner_of[remap[a]] = owner
             self.obj_color[remap[a]] = color
             self._relocate_tie_links(a, remap[a], moved=remap)
+            if owner is not None:
+                owner.site = None      # the payload relocated: no override
             if owner is not None and a != raw:
                 owner.g = A.append_color(remap[a], A.get_color(owner.g))
                 # The move's B.4 invalidation frees every cached copy of
@@ -994,6 +1074,8 @@ class DrustRuntime(ProtocolBackend):
         part.free(raw)
         self.on_move(raw, new_raw)  # FT state must not outlive the address
         owner = self.owner_of.pop(raw, None)
+        if owner is not None:
+            owner.site = None
         self.owner_of[new_raw] = owner
         self.obj_color.pop(raw, None)
         self.obj_color[new_raw] = 0

@@ -44,6 +44,8 @@ from __future__ import annotations
 import abc
 from typing import Any, Callable
 
+from . import addr as A
+
 
 class BorrowError(RuntimeError):
     """A program the Rust borrow checker would have rejected."""
@@ -117,6 +119,11 @@ class ProtocolBackend(abc.ABC):
     supports_affinity = False      # tie_to / TBox groups
     supports_prefetch = False      # speculative fetch is staleness-safe
     supports_coalescing = False    # runtime deref coalescer can register
+    # Access-locality tracker (``core/runtime.py`` PlacementTracker),
+    # installed by ``Cluster(placement="auto")``.  None = placement off:
+    # the guards skip telemetry entirely, so the default path stays
+    # byte-identical to the static-placement golden traces.
+    placement = None
 
     # ---- verbs ----------------------------------------------------------
     @abc.abstractmethod
@@ -159,6 +166,15 @@ class ProtocolBackend(abc.ABC):
         """Speculative fetch; only staleness-safe with ownership — the
         default posts nothing (apps run unmodified)."""
         return 0
+
+    def locate(self, h) -> int:
+        """Server currently hosting ``h``'s payload — the data-affinity
+        placement target (``Scheduler.spawn_to`` resolves through this,
+        never through the allocation-time home).  The default reads the
+        handle's global address, which is exact for fixed-home protocols
+        (GAM/Grappa never move data); ownership backends override to track
+        write-moves and transfers."""
+        return A.server_of(h.g if hasattr(h, "g") else h.raw)
 
     # ---- guard hooks (default: guard-layer borrow tracking) -------------
     def _enter_read(self, th, h):
@@ -248,6 +264,12 @@ class ReadGuard:
         self._state = "closed"
         self._value = None
         self.backend._exit_read(self.th, self.h, self._token)
+        pl = self.backend.placement
+        if pl is not None:
+            # Guard exit is the telemetry point: the borrow just released,
+            # so a triggered owner migration can never race a live borrow
+            # from this guard.
+            pl.note_access(self.th, self.h)
 
     def _abandon(self) -> None:
         """Recovery-only: retire the guard WITHOUT releasing the borrow.
@@ -313,6 +335,9 @@ class WriteGuard:
             return
         self._state = "closed"
         self.backend._exit_write(self.th, self.h, self._token)
+        pl = self.backend.placement
+        if pl is not None:
+            pl.note_access(self.th, self.h, write=True)
 
     def __exit__(self, *exc):
         self.close()

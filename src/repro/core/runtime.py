@@ -88,8 +88,27 @@ class Scheduler:
 
     def spawn_to(self, box, fn: Callable, *args,
                  parent: Thread | None = None) -> Thread:
-        """Data-affinity spawn (§4.1.3): run where ``box``'s object lives."""
-        server = A.server_of(box.g if hasattr(box, "g") else box.raw)
+        """Data-affinity spawn (§4.1.3): run where ``box``'s object lives.
+
+        Resolved through the backend's ``locate`` — the *current* owner
+        location — not the allocation-time home: after an ownership
+        ``transfer`` or a write-move the home partition is stale and a
+        home-resolved spawn would make every deref remote."""
+        server = self.cluster.backend.locate(box)
+        return self.spawn(fn, *args, server=server, parent=parent)
+
+    def spawn_near(self, handles, fn: Callable, *args,
+                   parent: Thread | None = None) -> Thread:
+        """Placement-guided spawn for a *set* of handles (a region's
+        pin/prefetch hint set): run on the weighted plurality of the
+        handles' current locations, ties to the lowest server id."""
+        votes: dict[int, float] = {}
+        for h in handles:
+            s = self.cluster.backend.locate(h)
+            votes[s] = votes.get(s, 0.0) + 1.0
+        if not votes:
+            return self.spawn(fn, *args, parent=parent)
+        server = max(sorted(votes), key=lambda s: votes[s])
         return self.spawn(fn, *args, server=server, parent=parent)
 
     def run(self, th: Thread) -> Any:
@@ -145,6 +164,18 @@ class Scheduler:
         th.server = dst
         th.migrations += 1
         th.local_heap_bytes = 0
+        # Telemetry decay: the counters describe the *old* neighborhood.
+        # Accesses to ``dst`` are local now (that entry would make the
+        # thread look remote-heavy on the server it just moved to, and
+        # ``balance`` would bounce it right back); the rest halve so the
+        # next round steers on post-migration evidence.
+        th.remote_accesses.pop(dst, None)
+        for s in list(th.remote_accesses):
+            kept = th.remote_accesses[s] // 2
+            if kept:
+                th.remote_accesses[s] = kept
+            else:
+                del th.remote_accesses[s]
         self.migration_log.append((th.tid, src, dst, lat))
         self.cluster.controller.thread_table[th.tid] = dst
         return lat
@@ -244,12 +275,24 @@ class GlobalController:
         healthy = [s for s in self._alive() if s not in stragglers]
         if not healthy:
             return 0
-        for t in list(self.cluster.scheduler.threads):
-            if not t.done and t.server in stragglers:
-                dst = min(healthy,
-                          key=lambda s: self.cluster.sim.servers[s].cpu_busy_us)
-                self.cluster.scheduler.migrate(t, dst)
-                moved += 1
+        sim = self.cluster.sim
+        victims = [t for t in self.cluster.scheduler.threads
+                   if not t.done and t.server in stragglers]
+        # Spread by *projected* load: migration barely moves cpu_busy_us,
+        # so re-reading the live snapshot per victim would send the whole
+        # drained population to the single fastest peer.  Account each
+        # migrated thread's estimated remaining work at its destination
+        # before placing the next one.
+        projected = {s: sim.servers[s].cpu_busy_us for s in sorted(healthy)}
+        per_thread_est = {
+            s: max(sim.servers[s].cpu_busy_us
+                   / max(1, sum(1 for v in victims if v.server == s)), 1.0)
+            for s in stragglers}
+        for t in victims:
+            dst = min(projected, key=lambda s: (projected[s], s))
+            projected[dst] += per_thread_est[t.server]
+            self.cluster.scheduler.migrate(t, dst)
+            moved += 1
         return moved
 
     # -- balancing ----------------------------------------------------------
@@ -370,6 +413,8 @@ class DerefCoalescer:
         self.flushed_derefs = 0
         self.registered = 0
         self.expose_flushes = 0                         # SLO-forced flushes
+        self.align = False      # placement: merge sibling threads' pending
+        #                         derefs for the same destinations at flush
 
     def wants(self, th, box) -> bool:
         """Registration applies to non-owning derefs of *cold remote*
@@ -443,11 +488,64 @@ class DerefCoalescer:
                 tids.discard(th.tid)
                 if not tids:
                     self.by_box.pop(box, None)
-        self.rt.read_many(th, [b for b, _ in items])
+        merged: list[tuple[Any, Any, Any]] = []         # (oth, box, ref)
+        if self.align and self.pending:
+            # Cross-thread quantum alignment (placement subsystem): sibling
+            # threads on the same server with pending derefs bound for the
+            # destinations this flush is already dialing join the same
+            # read_many — one doorbell per source instead of one per
+            # quantum.  The payload lands in the shared per-server cache,
+            # so the end state is identical to the siblings flushing on
+            # their own; only the doorbell count drops.  Their never-
+            # deref'd registration borrows release here (no cache pin).
+            dests = {A.server_of(b.g) for b, _ in items}
+            for tid in sorted(self.pending):
+                oth, oitems = self.pending[tid]
+                if oth.server != th.server:
+                    continue
+                take = [(b, r) for b, r in oitems
+                        if A.server_of(b.g) in dests]
+                if not take:
+                    continue
+                keep = [(b, r) for b, r in oitems
+                        if A.server_of(b.g) not in dests]
+                if keep:
+                    self.pending[tid] = (oth, keep)
+                    self.pending_bytes[tid] -= sum(
+                        self.rt.heap.group_bytes(A.clear_color(b.g))
+                        for b, _ in take)
+                else:
+                    self.pending.pop(tid)
+                    self.pending_bytes.pop(tid, None)
+                    self.first_reg_t.pop(tid, None)
+                for b, r in take:
+                    tids = self.by_box.get(b)
+                    if tids is not None:
+                        tids.discard(tid)
+                        if not tids:
+                            self.by_box.pop(b, None)
+                    merged.append((oth, b, r))
+            self.rt.sim.net.quantum_merges += len(merged)
+        if merged:
+            # The least-loaded participant drives the shared doorbell (the
+            # first thread to reach the flush point posts it; the others'
+            # registrations ride along).  Driving rotates with load, so
+            # the merged fetch work spreads across the sibling pool
+            # instead of piling onto whichever tid sorts first.
+            parts = {th.tid: th}
+            for oth, _, _ in merged:
+                parts[oth.tid] = oth
+            driver = min(parts.values(), key=lambda t: (t.t_us, t.tid))
+            self.rt.read_many(driver, [b for b, _ in items]
+                              + [b for _, b, _ in merged])
+        else:
+            self.rt.read_many(th, [b for b, _ in items])
         for _, ref in items:
             ref.drop(th)
+        for oth, _, ref in merged:
+            ref.drop(oth)
         self.flushes += 1
-        self.flushed_derefs += len(items)
+        self.flushed_derefs += len(items) + len(merged)
         return len(items)
 
     def discard(self, th) -> int:
@@ -489,6 +587,129 @@ class DerefCoalescer:
         return n
 
 
+@dataclass
+class PlacementPolicy:
+    """Knobs for telemetry-driven placement (``Cluster(placement="auto")``).
+
+    The guard layer feeds per-box access-locality counters (accessor
+    server × box, attributed to the TBox tie root so affinity groups are
+    judged — and moved — as one closure).  Weights decay by ``decay`` per
+    quantum epoch (EWMA), so the window tracks the *current* phase, not
+    the run's history.  When one server's weight dominates — at least
+    ``min_weight`` absolute and ``dominance`` × the runner-up — and the
+    payload lives elsewhere, the hot accessor pulls ownership to itself
+    with a fence-scoped live migration (``DrustRuntime.migrate_here``).
+    ``cooldown`` epochs of hysteresis after each move stop a contended box
+    from ping-ponging between two comparably hot servers.
+    """
+
+    decay: float = 0.5          # per-epoch EWMA multiplier on counters
+    min_weight: float = 3.0     # absolute weight floor to trigger a move
+    dominance: float = 2.0      # hot server must beat the runner-up by this
+    cooldown: int = 1           # epochs a box rests after migrating
+    quantum_align: bool = True  # merge sibling same-destination doorbells
+    # Write accesses vote with this weight.  Default 0: the drust
+    # write-move already relocates an object to any remote writer, so a
+    # write is always *local by construction* when its guard closes —
+    # counting it would anchor the box wherever compute last touched it
+    # and veto every read-affinity move.  Reads are what a static
+    # placement cannot fix; they carry the vote.
+    write_weight: float = 0.0
+
+
+class PlacementTracker:
+    """Access-locality telemetry + migration trigger behind
+    ``Cluster(placement="auto")``.
+
+    Installed as ``backend.placement``; ``ReadGuard``/``WriteGuard`` close
+    call ``note_access`` — guard exit is the one point where the borrow
+    just released, so a triggered migration can never race the recording
+    access's own borrow.  Migration is additionally suppressed while any
+    borrow in the moving closure is live (``migrate_here`` re-checks after
+    flushing registered derefs) and during recovery quiesce.
+    """
+
+    def __init__(self, cluster: "Cluster",
+                 policy: PlacementPolicy | None = None):
+        self.cluster = cluster
+        self.policy = policy or PlacementPolicy()
+        self.epoch = 0
+        # root box -> [weights {server: w}, last-decay epoch, last-mig epoch]
+        self._rec: dict[Any, list] = {}
+        self.samples = 0
+        self.migrations = 0
+
+    def tick(self) -> None:
+        """Close a quantum epoch: subsequent accesses see decayed weights
+        (applied lazily per box on its next access)."""
+        self.epoch += 1
+
+    def weights(self, box) -> dict[int, float]:
+        """Current (decayed) per-server weights for ``box``'s tie root."""
+        root = self.cluster.drust.placement_root(box)
+        rec = self._rec.get(root)
+        if rec is None:
+            return {}
+        f = self.policy.decay ** (self.epoch - rec[1])
+        return {s: w * f for s, w in rec[0].items()}
+
+    def note_access(self, th, h, write: bool = False) -> None:
+        cl = self.cluster
+        if cl.recovery is not None and cl.recovery.quiescing:
+            return                       # no placement churn mid fail-over
+        rt = cl.drust
+        root = rt.placement_root(h)
+        if root.dropped or root.lost:
+            self._rec.pop(root, None)
+            return
+        src = A.server_of(root.g)
+        if src != th.server:
+            th.note_remote(src)          # controller cpu-policy telemetry
+        p = self.policy
+        rec = self._rec.get(root)
+        if rec is None:
+            rec = [{}, self.epoch, -(1 << 30)]
+            self._rec[root] = rec
+        w = rec[0]
+        if rec[1] != self.epoch:         # lazy EWMA decay since last touch
+            f = p.decay ** (self.epoch - rec[1])
+            for s in list(w):
+                w[s] *= f
+                if w[s] < 1e-6:
+                    del w[s]
+            rec[1] = self.epoch
+        vote = p.write_weight if write else 1.0
+        if vote > 0.0:
+            w[th.server] = w.get(th.server, 0.0) + vote
+        self.samples += 1
+        if not w:
+            return
+        if self.epoch - rec[2] < p.cooldown:
+            return                       # hysteresis: box rested recently
+        hot = max(sorted(w), key=lambda s: w[s])
+        if hot != th.server or hot == src:
+            return   # only the hot accessor pulls, and only if remote
+        whot = w[hot]
+        second = max((v for s, v in w.items() if s != hot), default=0.0)
+        if whot < p.min_weight or whot < p.dominance * second:
+            return
+        if rt.migrate_here(th, root):
+            rec[2] = self.epoch
+            rec[0] = {}                  # fresh window after the move
+            self.migrations += 1
+
+    def spawn_hint(self, handles) -> int | None:
+        """Weighted-plurality location of a region's pin/prefetch hint
+        set — the ``spawn_near`` placement target (None = no preference)."""
+        votes: dict[int, float] = {}
+        for h in handles:
+            s = self.cluster.backend.locate(h)
+            votes[s] = votes.get(s, 0.0) + 1.0
+        if not votes:
+            return None
+        return max(sorted(votes), key=lambda s: votes[s])
+
+
 class Cluster:
     """One simulated deployment: N servers, one protocol backend."""
 
@@ -497,9 +718,13 @@ class Cluster:
                  partition_bytes: int | None = None, replicate: bool = False,
                  batch_io: bool = True, qps_per_thread: int = 1,
                  ooo: bool = False, coalesce: str = "manual",
-                 coalesce_policy: CoalescePolicy | None = None):
+                 coalesce_policy: CoalescePolicy | None = None,
+                 placement: str = "static",
+                 placement_policy: PlacementPolicy | None = None):
         if coalesce not in ("manual", "auto"):
             raise ValueError(f"unknown coalesce mode {coalesce!r}")
+        if placement not in ("static", "auto"):
+            raise ValueError(f"unknown placement mode {placement!r}")
         self.sim = Sim(n_servers, cores_per_server, cost,
                        qps_per_thread=qps_per_thread, ooo=ooo)
         self.heap = GlobalHeap(n_servers, partition_bytes)
@@ -522,6 +747,22 @@ class Cluster:
         self.coalesce = coalesce
         if coalesce == "auto" and self.backend_drust and batch_io:
             self.drust.coalescer = DerefCoalescer(self.drust, coalesce_policy)
+        # Telemetry-driven placement (opt-in: the default "static" keeps
+        # every run byte-identical to the pre-placement planes).  The
+        # tracker installs as ``backend.placement`` — the guard layer's
+        # close hooks feed it — and flips the coalescer's cross-thread
+        # quantum alignment on.
+        self.placement_mode = placement
+        self.placement: PlacementTracker | None = None
+        if placement == "auto":
+            if not self.backend_drust:
+                raise RuntimeError(
+                    "placement='auto' requires an ownership-capable backend")
+            self.placement = PlacementTracker(self, placement_policy)
+            self.backend.placement = self.placement
+            if (self.drust.coalescer is not None
+                    and self.placement.policy.quantum_align):
+                self.drust.coalescer.align = True
         self.scheduler = Scheduler(self)
         self.controller = GlobalController(self)
         self.replicator = None
@@ -591,6 +832,8 @@ class Cluster:
             ch.flush_sends()
         if self.backend_drust and self.drust.coalescer is not None:
             self.drust.coalescer.flush_all()
+        if self.placement is not None:
+            self.placement.tick()        # quantum epoch: counters decay
 
     def makespan_us(self) -> float:
         self.close_quanta()

@@ -1,0 +1,372 @@
+"""Placement subsystem: telemetry-driven live owner migration
+(``Cluster(placement="auto")``), the affinity-spawn / balancing /
+straggler-drain fixes it rides on, and cross-thread quantum alignment.
+
+The three regression tests at the top fail on the pre-fix code:
+
+  * ``spawn_to`` resolved the allocation-time home, so after an ownership
+    transfer the affinity spawn landed on the *old* owner;
+  * ``Thread.remote_accesses`` survived ``Scheduler.migrate`` untouched,
+    so the balancer read the pre-move neighborhood and bounced the thread
+    right back;
+  * ``mitigate_stragglers`` re-read the (barely moving) live CPU snapshot
+    per victim and herded every drained thread onto one fastest peer.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.core import Cluster, addr as A
+from repro.core.runtime import PlacementPolicy
+
+
+# --------------------------------------------------------------------------
+#  Satellite regressions (fail on pre-fix code)
+# --------------------------------------------------------------------------
+def test_spawn_to_follows_ownership_transfer():
+    """Affinity spawn must resolve the box's CURRENT owner location, not
+    the allocation-time home partition."""
+    cl = Cluster(4, backend="drust")
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t0, 64, b"x", server=2)
+    cl.backend.transfer(t0, box, 1)
+    th = cl.scheduler.spawn_to(box, lambda th: th.server, parent=t0)
+    assert th.server == 1, "spawn_to landed on the stale allocation home"
+    assert cl.scheduler.join(th) == 1
+
+
+def test_migrate_resets_stale_remote_telemetry():
+    """``remote_accesses`` describes the OLD neighborhood: the destination
+    entry clears (those accesses are local now) and the rest decay."""
+    cl = Cluster(3, backend="drust")
+    t0 = cl.main_thread(0)
+    t0.remote_accesses.update({1: 500, 2: 100})
+    cl.scheduler.migrate(t0, 1)
+    assert 1 not in t0.remote_accesses, \
+        "destination entry survived the move (thread looks remote-heavy " \
+        "on the server it just moved to)"
+    assert t0.remote_accesses == {2: 50}
+
+
+def test_balance_does_not_bounce_migrated_thread_back():
+    """Two balancing rounds: the first moves a remote-heavy thread to its
+    hot server; the second (with the destination now busy) must not read
+    the stale pre-move telemetry and bounce it back."""
+    cl = Cluster(2, backend="drust")
+    t0 = cl.main_thread(0)
+    t0.remote_accesses[1] = 500
+    cl.sim.servers[0].cpu_busy_us = 1e6
+    assert cl.controller.balance(horizon_us=1e4) == 1
+    assert t0.server == 1
+    cl.sim.servers[0].cpu_busy_us = 0.0
+    cl.sim.servers[1].cpu_busy_us = 1e6          # round 2: dst is the hot one
+    cl.controller.balance(horizon_us=1e4)
+    assert t0.server == 1, "stale telemetry ping-ponged the thread back"
+
+
+def test_straggler_drain_spreads_across_peers():
+    """Draining N threads off a straggler with M healthy peers must spread
+    them by projected load, not herd all N onto the single fastest peer."""
+    cl = Cluster(6, backend="drust")
+    ths = []
+    for _ in range(4):
+        th = cl.main_thread(0)
+        th.server = 5
+        ths.append(th)
+    # Distinct standing loads: a per-victim re-read of the live snapshot
+    # keeps electing server 0 (migration itself barely moves cpu_busy_us);
+    # only projected-load accounting spreads the drain.
+    for s, busy in enumerate((10.0, 50.0, 100.0, 150.0, 200.0, 800.0)):
+        cl.sim.servers[s].cpu_busy_us = busy
+    cl.sim.degrade(5, 8.0)
+    assert cl.controller.detect_stragglers() == [5]
+    assert cl.controller.mitigate_stragglers() == 4
+    dsts = Counter(t.server for t in ths)
+    assert 5 not in dsts
+    assert max(dsts.values()) == 1, \
+        f"drained threads herded onto one peer: {dict(dsts)}"
+
+
+# --------------------------------------------------------------------------
+#  locate / site semantics
+# --------------------------------------------------------------------------
+def test_locate_tracks_transfer_then_write_move():
+    cl = Cluster(4, backend="drust")
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t0, 64, b"v", server=0)
+    assert cl.backend.locate(box) == 0
+    cl.backend.transfer(t0, box, 2)
+    assert cl.backend.locate(box) == 2
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    cl.backend.write(t1, box, b"w")              # write-move relocates
+    assert A.server_of(box.g) == 1
+    assert box.site is None, "payload relocation must drop the site override"
+    assert cl.backend.locate(box) == 1
+
+
+def test_protocol_backends_locate_by_home():
+    """Non-ownership backends have no transfers: locate is the home."""
+    cl = Cluster(4, backend="gam")
+    t0 = cl.main_thread(0)
+    h = cl.backend.alloc(t0, 64, b"v", server=3)
+    assert cl.backend.locate(h) == 3
+
+
+# --------------------------------------------------------------------------
+#  Live owner migration (DrustRuntime.migrate_here)
+# --------------------------------------------------------------------------
+def test_migrate_here_moves_tbox_group_and_respects_borrows():
+    cl = Cluster(4, backend="drust")
+    t0 = cl.main_thread(0)
+    root = cl.backend.alloc(t0, 64, b"r", server=0)
+    child = cl.backend.alloc(t0, 256, b"c", tie_to=root)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    w = root.write(t0)
+    w.__enter__()
+    assert cl.drust.migrate_here(t1, root) is False, \
+        "migration ran under a live mutable borrow"
+    w.set(b"r2")
+    w.__exit__(None, None, None)
+    assert cl.drust.migrate_here(t1, root) is True
+    assert A.server_of(root.g) == 1
+    assert A.server_of(child.g) == 1, "tied child left behind by the move"
+    assert cl.sim.net.owner_migrations == 1
+    assert cl.sim.net.migration_round_trips >= 1
+    assert cl.backend.read(t1, root) == b"r2"
+    assert cl.backend.read(t1, child) == b"c"
+
+
+def test_migrate_here_noop_when_already_local():
+    cl = Cluster(4, backend="drust")
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t0, 64, b"v", server=0)
+    cl.backend.transfer(t0, box, 2)              # stale site override
+    assert cl.drust.migrate_here(t0, box) is False
+    assert box.site is None and cl.backend.locate(box) == 0
+    assert cl.sim.net.owner_migrations == 0
+
+
+def test_auto_placement_dominant_reader_pulls_ownership():
+    cl = Cluster(4, backend="drust", placement="auto")
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t0, 64, b"v", server=0)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    for _ in range(3):                           # min_weight=3 reads
+        with box.read(t1):
+            pass
+    assert cl.sim.net.owner_migrations == 1
+    assert cl.backend.locate(box) == 1
+    assert A.server_of(box.g) == 1
+
+
+def test_auto_placement_cooldown_hysteresis():
+    """A box rests ``cooldown`` epochs after a move; the next dominant
+    accessor only pulls it after a quantum boundary."""
+    cl = Cluster(4, backend="drust", placement="auto")
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t0, 64, b"v", server=0)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    t2 = cl.main_thread(0)
+    t2.server = 2
+    for _ in range(3):
+        with box.read(t1):
+            pass
+    assert cl.sim.net.owner_migrations == 1
+    for _ in range(4):                           # same epoch: cooldown holds
+        with box.read(t2):
+            pass
+    assert cl.sim.net.owner_migrations == 1, "box ping-ponged inside cooldown"
+    cl.close_quanta()                            # epoch boundary
+    for _ in range(4):
+        with box.read(t2):
+            pass
+    assert cl.sim.net.owner_migrations == 2
+    assert cl.backend.locate(box) == 2
+
+
+def test_auto_placement_suppressed_during_recovery_quiesce():
+    cl = Cluster(4, backend="drust", replicate=True, placement="auto")
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t0, 64, b"v", server=0)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    cl.recovery.quiescing = True
+    for _ in range(6):
+        with box.read(t1):
+            pass
+    assert cl.sim.net.owner_migrations == 0, "placement churn mid fail-over"
+    cl.recovery.quiescing = False
+    for _ in range(3):
+        with box.read(t1):
+            pass
+    assert cl.sim.net.owner_migrations == 1
+
+
+def test_auto_placement_requires_dominance_not_presence():
+    """Two comparably hot servers: neither dominates 2x, nobody moves."""
+    cl = Cluster(4, backend="drust",
+                 placement_policy=PlacementPolicy(), placement="auto")
+    t0 = cl.main_thread(0)
+    box = cl.backend.alloc(t0, 64, b"v", server=0)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    t2 = cl.main_thread(0)
+    t2.server = 2
+    for _ in range(5):                           # interleaved: no 2x winner
+        with box.read(t1):
+            pass
+        with box.read(t2):
+            pass
+    assert cl.sim.net.owner_migrations == 0
+    assert A.server_of(box.g) == 0
+
+
+def test_placement_rejected_on_non_ownership_backend():
+    import pytest
+    with pytest.raises(RuntimeError):
+        Cluster(2, backend="gam", placement="auto")
+    with pytest.raises(ValueError):
+        Cluster(2, backend="drust", placement="wat")
+
+
+# --------------------------------------------------------------------------
+#  Cross-thread quantum alignment
+# --------------------------------------------------------------------------
+def test_sibling_same_destination_derefs_merge_at_flush():
+    cl = Cluster(4, backend="drust", coalesce="auto", placement="auto")
+    boot = cl.main_thread(0)
+    a = cl.backend.alloc(boot, 256, b"a", server=2)
+    b = cl.backend.alloc(boot, 256, b"b", server=2)
+    c = cl.backend.alloc(boot, 256, b"c", server=3)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    t2 = cl.main_thread(0)
+    t2.server = 1
+    assert cl.backend.read(t1, a) == b"a"        # registered, pending
+    assert cl.backend.read(t2, b) == b"b"        # sibling, same destination
+    assert cl.backend.read(t2, c) == b"c"        # sibling, other destination
+    co = cl.drust.coalescer
+    assert co.align and len(co.pending) == 2
+    co.flush(t1)
+    assert cl.sim.net.quantum_merges == 1, \
+        "sibling same-destination deref did not join the doorbell"
+    # t2's quantum kept only the unmergeable destination
+    assert len(co.pending) == 1
+    (_, items), = co.pending.values()
+    assert [bx for bx, _ in items] == [c]
+    co.flush(t2)
+    assert cl.sim.net.quantum_merges == 1
+    # end state identical to independent flushes: both payloads warm
+    assert a.g in cl.drust.caches[1].entries
+    assert b.g in cl.drust.caches[1].entries
+
+
+def test_quantum_merge_off_by_default():
+    cl = Cluster(4, backend="drust", coalesce="auto")
+    boot = cl.main_thread(0)
+    a = cl.backend.alloc(boot, 256, b"a", server=2)
+    b = cl.backend.alloc(boot, 256, b"b", server=2)
+    t1 = cl.main_thread(0)
+    t1.server = 1
+    t2 = cl.main_thread(0)
+    t2.server = 1
+    cl.backend.read(t1, a)
+    cl.backend.read(t2, b)
+    cl.drust.coalescer.flush(t1)
+    assert cl.sim.net.quantum_merges == 0
+    assert len(cl.drust.coalescer.pending) == 1  # t2 flushes on its own
+
+
+# --------------------------------------------------------------------------
+#  Placement-guided spawn
+# --------------------------------------------------------------------------
+def test_spawn_near_weighted_plurality():
+    cl = Cluster(4, backend="drust", placement="auto")
+    t0 = cl.main_thread(0)
+    hs = [cl.backend.alloc(t0, 64, i, server=s)
+          for i, s in enumerate((2, 2, 3))]
+    th = cl.scheduler.spawn_near(hs, lambda th: th.server, parent=t0)
+    assert th.server == 2
+    assert cl.placement.spawn_hint(hs) == 2
+    assert cl.placement.spawn_hint([]) is None
+
+
+# --------------------------------------------------------------------------
+#  The placement_sweep bench gate trips in both directions
+# --------------------------------------------------------------------------
+import copy
+
+import pytest
+
+from benchmarks import check_regression
+
+_PLACEMENT_BASE = {
+    "placement_sweep": {
+        "socialnet_spread_8srv": {
+            "makespan_us": 128.0, "round_trips": 619,
+            "owner_migrations": 0, "migration_round_trips": 0,
+            "quantum_merges": 0, "digest": 12345},
+        "socialnet_auto_8srv": {
+            "makespan_us": 102.0, "round_trips": 369,
+            "owner_migrations": 41, "migration_round_trips": 75,
+            "quantum_merges": 223, "digest": 12345,
+            "best_static_makespan_us": 120.6,
+            "best_static_round_trips": 484,
+            "auto_beats_static": True},
+    }
+}
+
+
+def test_placement_gate_green_on_identical_run():
+    cur = copy.deepcopy(_PLACEMENT_BASE)
+    assert check_regression.compare(_PLACEMENT_BASE, cur, 0.10) == []
+    # derived best-static columns are visible but not gated
+    cur["placement_sweep"]["socialnet_auto_8srv"][
+        "best_static_makespan_us"] = 999.0
+    assert check_regression.compare(_PLACEMENT_BASE, cur, 0.10) == []
+
+
+def test_placement_gate_trips_on_makespan_regression():
+    cur = copy.deepcopy(_PLACEMENT_BASE)
+    cur["placement_sweep"]["socialnet_auto_8srv"]["makespan_us"] = 122.4
+    fails = check_regression.compare(_PLACEMENT_BASE, cur, 0.10)
+    assert any("placement_sweep/socialnet_auto_8srv/makespan_us" in f
+               for f in fails)
+
+
+@pytest.mark.parametrize("delta", [-1, +1])
+def test_placement_gate_trips_on_migration_drift_both_directions(delta):
+    """The migration counters are pinned EXACTLY: migrating more than the
+    baseline (churn) fails just like migrating less (a dead trigger)."""
+    cur = copy.deepcopy(_PLACEMENT_BASE)
+    cur["placement_sweep"]["socialnet_auto_8srv"]["owner_migrations"] += delta
+    cur["placement_sweep"]["socialnet_auto_8srv"][
+        "migration_round_trips"] += delta
+    cur["placement_sweep"]["socialnet_auto_8srv"]["quantum_merges"] += delta
+    cur["placement_sweep"]["socialnet_spread_8srv"]["round_trips"] += delta
+    fails = check_regression.compare(_PLACEMENT_BASE, cur, 0.10)
+    assert any("socialnet_auto_8srv/owner_migrations" in f for f in fails)
+    assert any("socialnet_auto_8srv/migration_round_trips" in f
+               for f in fails)
+    assert any("socialnet_auto_8srv/quantum_merges" in f for f in fails)
+    assert any("socialnet_spread_8srv/round_trips" in f for f in fails)
+
+
+def test_placement_gate_trips_when_auto_stops_beating_static():
+    cur = copy.deepcopy(_PLACEMENT_BASE)
+    cur["placement_sweep"]["socialnet_auto_8srv"][
+        "auto_beats_static"] = False
+    fails = check_regression.compare(_PLACEMENT_BASE, cur, 0.10)
+    assert any("auto_beats_static flipped false" in f for f in fails)
+
+
+def test_placement_gate_trips_on_missing_row():
+    cur = copy.deepcopy(_PLACEMENT_BASE)
+    del cur["placement_sweep"]["socialnet_auto_8srv"]
+    fails = check_regression.compare(_PLACEMENT_BASE, cur, 0.10)
+    assert any("socialnet_auto_8srv: missing" in f for f in fails)
