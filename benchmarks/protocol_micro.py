@@ -676,6 +676,53 @@ def clone_fastpath_guard(n_elems: int = 4096, reps: int = 30):
     return rows
 
 
+def sanitize_overhead_summary(n_requests: int = 80, n_ops: int = 400) -> dict:
+    """Wall-clock cost of the runtime borrow/cid sanitizer
+    (``Cluster(sanitize=True)``, ``docs/analysis.md``) on two app kernels.
+
+    Diagnostics only — **never gated**: wall-clock varies across runners,
+    and the *simulated* trajectory is identical by construction (the
+    sanitizer observes guard/verb events, it charges no cost).  The
+    ``span_identical`` bools are the interesting part: they assert the
+    observation-only contract on every refresh of ``BENCH_protocol.json``.
+    """
+    import os
+
+    from repro.analysis.sanitizer import Sanitizer
+    from repro.apps.kvstore import run_kvstore
+    from repro.apps.socialnet import run_socialnet
+
+    out: dict = {}
+    prev = os.environ.get("REPRO_SANITIZE")
+    try:
+        for name, fn, kw in (
+            ("socialnet", run_socialnet, dict(n_requests=n_requests)),
+            ("kvstore", run_kvstore,
+             dict(n_keys=256, n_ops=n_ops, txn_frac=0.3)),
+        ):
+            runs = {}
+            for mode in ("off", "on"):
+                os.environ["REPRO_SANITIZE"] = "1" if mode == "on" else "0"
+                t0 = time.perf_counter()
+                r = fn(4, "drust", **kw)
+                wall = time.perf_counter() - t0
+                runs[mode] = (wall, r.makespan_us)
+            out[name] = {
+                "wall_ms_off": round(runs["off"][0] * 1e3, 1),
+                "wall_ms_on": round(runs["on"][0] * 1e3, 1),
+                "overhead_x": round(
+                    runs["on"][0] / max(runs["off"][0], 1e-9), 2),
+                "trace_events": len(Sanitizer.last.trace),
+                "span_identical": runs["off"][1] == runs["on"][1],
+            }
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_SANITIZE", None)
+        else:
+            os.environ["REPRO_SANITIZE"] = prev
+    return out
+
+
 def all_rows():
     rows = []
     for backend in ("drust", "gam", "grappa"):

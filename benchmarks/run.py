@@ -73,6 +73,11 @@ def quick(out_path: str = "BENCH_protocol.json") -> dict:
         # makespan AND round trips at 8+ servers, identical digests) is
         # gated and must not flip false.
         "placement_sweep": protocol_micro.placement_summary(),
+        # Runtime-sanitizer wall-clock overhead (docs/analysis.md).  Never
+        # gated — wall-clock is runner-dependent; the span_identical bools
+        # document the observation-only contract (identical simulated
+        # trajectory with the sanitizer on).
+        "sanitize_overhead": protocol_micro.sanitize_overhead_summary(),
         "prefetch": {},
     }
     for app, fn, kw in (

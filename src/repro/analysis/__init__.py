@@ -1,0 +1,40 @@
+"""Ownership analysis subsystem: static lint + runtime sanitizer + certifier.
+
+DRust's thesis is that language-level ownership constrains access order
+enough to make DSM coherence cheap — but the repo can only *lean on* that
+discipline if something checks it.  This package is the checker, in three
+cooperating layers:
+
+* ``linter`` — an AST borrow lint over the app-level surface
+  (``src/repro/apps/``, ``src/repro/serve/``, ``src/repro/core/sync.py``,
+  ``examples/``).  It reports the violations the old CI grep could not
+  see: raw protocol-verb call pairs, guard payloads escaping their
+  ``with`` scope, ``transfer``/``drop``/``free`` under a syntactically
+  live guard, guards opened without ``with``, and handles captured by
+  ``spawn`` closures without locality routing.  CLI:
+  ``PYTHONPATH=src python -m repro.analysis.lint [--format=github]``.
+
+* ``sanitizer`` — a TSan-style runtime checker enabled by
+  ``Cluster(sanitize=True)`` (or ``REPRO_SANITIZE=1``).  It hooks guard
+  enter/exit, verb posting, lock acquisition, and cid disposition, and
+  verifies balanced borrows (per thread, at ``Scheduler.retire`` /
+  ``migrate`` / ``fail_over``), tombstoned payload snapshots, exactly-once
+  speculative-cid disposition, and deadlock-free lock acquisition order.
+  Violations raise structured ``SanitizerError``s carrying the event
+  trace that led to them.  Observation-only: no cost-model charges, no
+  verbs — sanitize-off runs stay byte-identical.
+
+* ``races`` — a trace-based coherence race certifier.  It replays the
+  sanitizer's event trace and proves the paper's core claim as a
+  happens-before check: any two conflicting accesses to a box (or its
+  TBox tie root) are ordered by an ownership edge — transfer, write-move,
+  ``migrate_here``, lease grant/revoke, or lock hand-off — and every read
+  observed the epoch of the latest such ordered write (a replica served
+  after its epoch bump trips the certifier).
+
+See ``docs/analysis.md`` for the rule catalogue and the event model.
+"""
+
+from .linter import LintViolation, lint_file, lint_paths  # noqa: F401
+from .races import RaceError, certify  # noqa: F401
+from .sanitizer import Event, Sanitizer, SanitizerError  # noqa: F401

@@ -1,0 +1,63 @@
+"""CLI: ``python -m repro.analysis.lint [paths...] [--format=text|github|json]``.
+
+With no paths, lints the default app-level surface (``src/repro/apps``,
+``src/repro/serve``, ``src/repro/core/sync.py``, ``examples``) resolved
+relative to the repository root.  Exits 1 if any violation is reported.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .linter import lint_paths
+
+
+def default_targets() -> list[Path]:
+    # src/repro/analysis/lint.py -> repo root is three parents above src/.
+    root = Path(__file__).resolve().parents[3]
+    targets = [
+        root / "src" / "repro" / "apps",
+        root / "src" / "repro" / "serve",
+        root / "src" / "repro" / "core" / "sync.py",
+        root / "examples",
+    ]
+    return [t for t in targets if t.exists()]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="AST borrow lint for the guard-API app surface.",
+    )
+    ap.add_argument("paths", nargs="*", help="files or directories (default: app surface)")
+    ap.add_argument(
+        "--format",
+        choices=("text", "github", "json"),
+        default="text",
+        help="text (default), github (workflow annotations), or json",
+    )
+    args = ap.parse_args(argv)
+
+    paths = [Path(p) for p in args.paths] or default_targets()
+    violations = lint_paths(paths)
+
+    if args.format == "json":
+        print(
+            json.dumps(
+                [v.__dict__ for v in violations], indent=2, sort_keys=True
+            )
+        )
+    else:
+        for v in violations:
+            print(v.format(args.format))
+        n = len(violations)
+        tail = f"{n} violation{'s' if n != 1 else ''}"
+        print(f"repro.analysis.lint: {tail} in {len(paths)} target(s)", file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

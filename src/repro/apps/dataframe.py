@@ -160,8 +160,11 @@ def run_dataframe(n_servers: int, backend: str = "drust",
                 for h in probe_handles[:-1]:
                     with h.read(th):
                         pass
+                # Copy while the guard is open: `srcs` outlives this block
+                # (scan/materialize passes below), and the payload itself is
+                # only valid under the guard.
                 with index[k].read(th) as v:
-                    srcs = v
+                    srcs = list(v)
             if use_tbox:
                 # iterating the column dereferences the head TBox chain:
                 # the whole group lands in the local cache in one READ

@@ -542,6 +542,13 @@ class RecoveryManager:
                 batch.add_read(s, 16)
             batch.commit(th)
 
+        # Sanitizer reconciliation: the dead threads' guards and locks were
+        # force-released/abandoned by the phases above — settle their
+        # accounting so the borrow-balance checks still hold for survivors.
+        san = cl.backend.sanitizer
+        if san is not None:
+            san.on_failover(dead_tids)
+
         makespan = th.t_us - t0
         net.recovery_makespan_us = makespan
         report = RecoveryReport(

@@ -396,6 +396,8 @@ class WritebackQueue:
         net.bytes_moved += nbytes
         sim.servers[sim._serve(dst_server)].bytes_in += nbytes
         sim.servers[th.server].bytes_out += nbytes
+        if sim.tracer is not None:
+            sim.tracer.note_post(th, cid, dst_server, nbytes, kind)
         return cid
 
     def post_read(self, th, src_server: int, nbytes: int,
@@ -433,6 +435,9 @@ class WritebackQueue:
         net.bytes_moved += nbytes
         sim.servers[sim._serve(src_server)].bytes_out += nbytes
         sim.servers[th.server].bytes_in += nbytes
+        if sim.tracer is not None:
+            sim.tracer.note_post(th, cid, src_server, nbytes, "read",
+                                 is_read=True)
         return cid
 
     # ---- fences --------------------------------------------------------
@@ -481,6 +486,8 @@ class WritebackQueue:
         depends on."""
         net = self.sim.net
         net.fences += 1
+        if self.sim.tracer is not None:
+            self.sim.tracer.note_fence(th, upto_id)
         take = [v for v in self._pending.values() if v.cid <= upto_id]
         t = max((v.done_us for v in take), default=0.0)
         t = max(t, self._retired_before(upto_id))
@@ -515,6 +522,8 @@ class WritebackQueue:
         fence on those cids still waits) and their latest completion is a
         makespan floor.  A rescale that wants a fully clean slate ends the
         epoch via ``Sim.snapshot()``/``Sim.reset()`` after retiring."""
+        if self.sim.tracer is not None:
+            self.sim.tracer.note_forget(tid)
         mine = [v for v in self._pending.values() if v.tid == tid]
         for v in mine:
             self._retired_floor = max(self._retired_floor, v.done_us)
@@ -553,6 +562,8 @@ class WritebackQueue:
         if not self._pending:
             self._bw_tail.clear()
             self._bw_tail_rd.clear()
+        if self.sim.tracer is not None and victims:
+            self.sim.tracer.note_orphans([v.cid for v in victims])
         return victims
 
     def end_epoch(self) -> None:
@@ -585,6 +596,10 @@ class Sim:
         self.n = n_servers
         self.cores = cores_per_server
         self.cost = cost or CostModel()
+        # Event tracer (``repro.analysis.sanitizer.Sanitizer``), installed
+        # by ``Cluster(sanitize=True)``.  None = off: the completion plane
+        # emits nothing — observation only, byte-identical either way.
+        self.tracer = None
         self.qps = max(1, int(qps_per_thread))
         self.ooo = bool(ooo)
         self.servers = [ServerStats() for _ in range(n_servers)]

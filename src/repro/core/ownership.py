@@ -478,7 +478,10 @@ class DrustRuntime(ProtocolBackend):
     # ---- whole-object verbs (thin shims over the guards) -----------------
     def read(self, th, box: DBox) -> Any:
         with ReadGuard(self, th, box) as v:
-            return v
+            # Whole-object read is copy-out: the caller keeps the value
+            # past the internal guard, so hand out a plain copy, never the
+            # guard-scoped (sanitize: tombstoned) snapshot.
+            return v if self.sanitizer is None else self.sanitizer.adopt(v)
 
     def write(self, th, box: DBox, data: Any) -> None:
         with WriteGuard(self, th, box) as w:
@@ -707,6 +710,8 @@ class DrustRuntime(ProtocolBackend):
         box.site = dst_server          # data-affinity now follows the owner
         # ... and flush batched write-backs to the backup partition now.
         self.on_transfer(A.clear_color(box.g))
+        if self.sanitizer is not None:
+            self.sanitizer.note_transfer(th_src, box, dst_server)
 
     # ---- placement (telemetry-driven; see core/runtime.py) ---------------
     def locate(self, box: DBox) -> int:
@@ -775,6 +780,8 @@ class DrustRuntime(ProtocolBackend):
         box.home = th.server
         box.site = None
         self.on_transfer(new_raw)      # replica epoch follows the owner
+        if self.sanitizer is not None:
+            self.sanitizer.note_migrate_here(th, box)
         net.owner_migrations += 1
         net.migration_round_trips += net.round_trips - rt0
         return True
@@ -828,6 +835,8 @@ class DrustRuntime(ProtocolBackend):
             self.sim.net.late_fences += 1
         else:
             self.sim.net.wasted_prefetches += 1
+        if self.sanitizer is not None:
+            self.sanitizer.note_spec_dispose(cid, how, True)
         return True
 
     def _spec_outstanding(self, box: DBox) -> bool:
@@ -931,6 +940,8 @@ class DrustRuntime(ProtocolBackend):
                     owner.fetch_cid = cid
                     owner.fetch_server = th.server
             self.spec_cids.append(cid)
+            if self.sanitizer is not None:
+                self.sanitizer.note_spec(th, cid)
             posted += 1
         return posted
 

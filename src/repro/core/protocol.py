@@ -72,6 +72,43 @@ def _bump_guard_stat(backend, key: str) -> None:
     stats[key] = stats.get(key, 0) + 1
 
 
+def _note_open(backend, tid: int, kind: str, delta: int) -> None:
+    """Open-guard accounting: a gauge per guard kind in ``guard_stats``
+    (``open_read_guards``/``open_write_guards``/``open_pins``/
+    ``open_regions``) plus a per-thread count (``backend.open_by_tid``) so
+    ``Scheduler.retire`` can warn on a thread leaving with live guards.
+    Observability only — never charged, never gated."""
+    stats = getattr(backend, "guard_stats", None)
+    if stats is not None:
+        k = "open_" + kind
+        n = stats.get(k, 0) + delta
+        stats[k] = n if n > 0 else 0
+    m = getattr(backend, "open_by_tid", None)
+    if m is None:
+        try:
+            m = backend.open_by_tid = {}
+        except AttributeError:               # pragma: no cover - __slots__
+            return
+    n = m.get(tid, 0) + delta
+    if n > 0:
+        m[tid] = n
+    else:
+        m.pop(tid, None)
+
+
+def detach_guard(g: "ReadGuard") -> None:
+    """Exempt a deliberately scope-escaping guard (a reader lease's pinned
+    copy — see ``core/sync.py``) from open-guard accounting: the lease is
+    released by writer revocation or recovery, not by the granting
+    thread's scope, so it must not count as a leak at retire."""
+    g._detached = True
+    _note_open(g.backend, getattr(g.th, "tid", -1),
+               "pins" if g._pin else "read_guards", -1)
+    san = g.backend.sanitizer
+    if san is not None:
+        san.detach_guard(g)
+
+
 # --------------------------------------------------------------------------
 #  Backend registry (capability lookup without string special-casing)
 # --------------------------------------------------------------------------
@@ -124,6 +161,11 @@ class ProtocolBackend(abc.ABC):
     # the guards skip telemetry entirely, so the default path stays
     # byte-identical to the static-placement golden traces.
     placement = None
+    # Runtime borrow/cid sanitizer (``repro.analysis.sanitizer``),
+    # installed by ``Cluster(sanitize=True)``.  None = sanitize off: the
+    # guards skip the hooks entirely — observation only, byte-identical
+    # counters either way.
+    sanitizer = None
 
     # ---- verbs ----------------------------------------------------------
     @abc.abstractmethod
@@ -235,11 +277,13 @@ class ReadGuard:
     by ``Region.pin``) forces a real held borrow even where a plain read
     would defer to the coalescer."""
 
-    __slots__ = ("backend", "th", "h", "_token", "_value", "_state", "_pin")
+    __slots__ = ("backend", "th", "h", "_token", "_value", "_state", "_pin",
+                 "_detached")
 
     def __init__(self, backend: ProtocolBackend, th, h, pin: bool = False):
         self.backend, self.th, self.h = backend, th, h
         self._pin = pin
+        self._detached = False                 # lease guards: see detach_guard
         self._state = "new"                    # new | open | closed
 
     def __enter__(self):
@@ -250,6 +294,11 @@ class ReadGuard:
         self._token, self._value = enter(self.th, self.h)
         self._state = "open"
         _bump_guard_stat(self.backend, "pins" if self._pin else "read_guards")
+        _note_open(self.backend, getattr(self.th, "tid", -1),
+                   "pins" if self._pin else "read_guards", +1)
+        san = self.backend.sanitizer
+        if san is not None:
+            self._value = san.on_read_enter(self, self._value, pin=self._pin)
         return self._value
 
     @property
@@ -264,6 +313,12 @@ class ReadGuard:
         self._state = "closed"
         self._value = None
         self.backend._exit_read(self.th, self.h, self._token)
+        if not self._detached:
+            _note_open(self.backend, getattr(self.th, "tid", -1),
+                       "pins" if self._pin else "read_guards", -1)
+        san = self.backend.sanitizer
+        if san is not None:
+            san.on_guard_close(self, "read")
         pl = self.backend.placement
         if pl is not None:
             # Guard exit is the telemetry point: the borrow just released,
@@ -282,6 +337,12 @@ class ReadGuard:
             return
         self._state = "closed"
         self._value = None
+        if not self._detached:
+            _note_open(self.backend, getattr(self.th, "tid", -1),
+                       "pins" if self._pin else "read_guards", -1)
+        san = self.backend.sanitizer
+        if san is not None:
+            san.on_guard_abandon(self)
 
     def __exit__(self, *exc):
         self.close()
@@ -309,6 +370,11 @@ class WriteGuard:
         self._token = self.backend._enter_write(self.th, self.h)
         self._state = "open"
         _bump_guard_stat(self.backend, "write_guards")
+        _note_open(self.backend, getattr(self.th, "tid", -1),
+                   "write_guards", +1)
+        san = self.backend.sanitizer
+        if san is not None:
+            san.on_write_enter(self)
         return self
 
     def _check_open(self):
@@ -322,6 +388,9 @@ class WriteGuard:
 
     def set(self, data: Any) -> None:
         self._check_open()
+        san = self.backend.sanitizer
+        if san is not None:
+            data = san.adopt(data)
         self.backend._write_set(self.th, self.h, self._token, data)
 
     def update(self, fn: Callable[[Any], Any]) -> Any:
@@ -335,6 +404,11 @@ class WriteGuard:
             return
         self._state = "closed"
         self.backend._exit_write(self.th, self.h, self._token)
+        _note_open(self.backend, getattr(self.th, "tid", -1),
+                   "write_guards", -1)
+        san = self.backend.sanitizer
+        if san is not None:
+            san.on_guard_close(self, "write")
         pl = self.backend.placement
         if pl is not None:
             pl.note_access(self.th, self.h, write=True)
@@ -380,6 +454,8 @@ class Region:
             raise BorrowError("region re-entered")
         self._state = "open"
         _bump_guard_stat(self.cluster.backend, "regions")
+        _note_open(self.cluster.backend, getattr(self.th, "tid", -1),
+                   "regions", +1)
         try:
             if self._prefetch:
                 self.prefetch(self._prefetch)
@@ -392,6 +468,8 @@ class Region:
             # raises — release any pins already taken before propagating,
             # or the hint failure would leak borrows forever.
             self._state = "closed"
+            _note_open(self.cluster.backend, getattr(self.th, "tid", -1),
+                       "regions", -1)
             for g in reversed(self._pins):
                 g.close()
             self._pins.clear()
@@ -415,6 +493,8 @@ class Region:
         if self._state != "open":
             return False
         self._state = "closed"
+        _note_open(self.cluster.backend, getattr(self.th, "tid", -1),
+                   "regions", -1)
         for g in reversed(self._pins):
             g.close()
         self._pins.clear()

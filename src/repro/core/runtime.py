@@ -27,6 +27,8 @@ from __future__ import annotations
 
 import itertools
 import math
+import os
+import warnings
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -84,6 +86,9 @@ class Scheduler:
             if parent.server != server:
                 self.cluster.sim.rpc(parent, server, req_bytes=256)
             th.t_us = max(th.t_us, parent.t_us)
+        san = self.cluster.backend.sanitizer
+        if san is not None:
+            san.note_spawn(parent, th)
         return th
 
     def spawn_to(self, box, fn: Callable, *args,
@@ -129,6 +134,9 @@ class Scheduler:
             self.run(th)
         if waiter is not None:
             waiter.t_us = max(waiter.t_us, th.t_us)
+        san = self.cluster.backend.sanitizer
+        if san is not None and waiter is not None:
+            san.note_join(th, waiter)
         return th.result
 
     def retire(self, th: Thread) -> None:
@@ -140,6 +148,20 @@ class Scheduler:
         cl = self.cluster
         if cl.backend_drust and cl.drust.coalescer is not None:
             cl.drust.coalescer.flush(th)     # quantum closes with the thread
+        # Guard-leak checkpoint: a thread must not leave the pool holding
+        # live borrows (the borrow would pin remote state forever).  Under
+        # sanitize this raises with provenance; otherwise it warns.
+        san = cl.backend.sanitizer
+        if san is not None:
+            san.check_thread(th, "retire")
+        else:
+            leaked = getattr(cl.backend, "open_by_tid", {}).get(th.tid, 0)
+            if leaked:
+                warnings.warn(
+                    f"thread {th.tid} retired with {leaked} open guard(s) — "
+                    f"borrows leak past the thread lifetime "
+                    f"(run with Cluster(sanitize=True) to locate them)",
+                    RuntimeWarning, stacklevel=2)
         cl.sim.wb.forget(th.tid)
         cl.controller.thread_table.pop(th.tid, None)
 
@@ -154,6 +176,11 @@ class Scheduler:
         cl = self.cluster
         if cl.backend_drust and cl.drust.coalescer is not None:
             cl.drust.coalescer.flush(th)     # quantum closes on migration
+        san = cl.backend.sanitizer
+        if san is not None:
+            # A migrating stack must not carry live borrows (the borrowed
+            # pointer would dangle across the move).
+            san.check_thread(th, "migrate", detail=f"server {src}->{dst}")
         lat = (sim.cost.two_sided_rtt_us * 2                    # ctrl handshake
                + sim.cost.xfer_us(th.stack_bytes + 512)         # stack + regs
                + sim.cost.msg_proc_us * 2)
@@ -720,7 +747,8 @@ class Cluster:
                  ooo: bool = False, coalesce: str = "manual",
                  coalesce_policy: CoalescePolicy | None = None,
                  placement: str = "static",
-                 placement_policy: PlacementPolicy | None = None):
+                 placement_policy: PlacementPolicy | None = None,
+                 sanitize: bool | None = None):
         if coalesce not in ("manual", "auto"):
             raise ValueError(f"unknown coalesce mode {coalesce!r}")
         if placement not in ("static", "auto"):
@@ -775,6 +803,19 @@ class Cluster:
         if self.backend_drust:
             from .fault import RecoveryManager
             self.recovery = RecoveryManager(self)
+        # Runtime borrow/cid sanitizer (``repro.analysis``): opt-in via the
+        # ``sanitize`` flag or the ``REPRO_SANITIZE`` env var (so CI can run
+        # an unmodified test subset under sanitize).  Observation only —
+        # sanitize-off runs are byte-identical, sanitize-on runs add checks
+        # and an event trace but never charge the cost model.
+        if sanitize is None:
+            sanitize = os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+        self.sanitizer = None
+        if sanitize:
+            from repro.analysis.sanitizer import Sanitizer
+            self.sanitizer = Sanitizer(self)
+            self.backend.sanitizer = self.sanitizer
+            self.sim.tracer = self.sanitizer
 
     # elasticity ----------------------------------------------------------
     def add_server(self) -> int:
@@ -837,6 +878,8 @@ class Cluster:
 
     def makespan_us(self) -> float:
         self.close_quanta()
+        if self.sanitizer is not None:
+            self.sanitizer.final_check()     # spec-cid ledger must balance
         return self.sim.makespan_us(self.scheduler.threads)
 
     def throughput(self, n_ops: int) -> float:

@@ -53,7 +53,7 @@ from __future__ import annotations
 from typing import Any, Callable
 
 from . import addr as A
-from .protocol import ReadGuard, WriteGuard
+from .protocol import ReadGuard, WriteGuard, detach_guard
 
 
 def _raw(h) -> int:
@@ -249,6 +249,12 @@ class DMutex:
         acquisition in the transactional kvstore).  Returns the protected
         heap object.  Spin semantics regardless of mode — an explicit
         multi-lock hold cannot be shipped as one closure."""
+        san = self.backend.sanitizer
+        if san is not None:
+            # Lockdep: record held->acquired order edges; an inverted
+            # order (the sorted-bucket discipline broken) raises before
+            # the deadlock can happen on real hardware.
+            san.note_lock_acquire(th, self, name=f"DMutex@s{self.home}")
         self._lock_verb(th)
         self.acquisitions += 1
         if th.t_us < self._release_t:                    # wait for holder
@@ -266,6 +272,9 @@ class DMutex:
         self._holder = None
         self._release_t = max(self._release_t, th.t_us)  # section end
         self._release_verb(th)
+        san = self.backend.sanitizer
+        if san is not None:
+            san.note_lock_release(th, self)
 
     def with_lock(self, th, fn: Callable[[Any], Any], reads: int = 0,
                   read_bytes: int = 64, compute_us: float = 0.0) -> Any:
@@ -417,8 +426,12 @@ class DRwLock:
             return g
         if th.t_us < self._release_t:  # a write is mid-flight: wait it out
             th.t_us = self._release_t
-        g = ReadGuard(self.backend, th, self.h, pin=True)
-        g.__enter__()
+        # A lease outlives lexical scope by design: the pinned guard stays
+        # open until a writer revokes it, so no `with` is possible here.
+        # Recovery (`on_server_failed`) and `_revoke` are the release paths.
+        g = ReadGuard(self.backend, th, self.h, pin=True)  # lint: allow(guard-no-with)
+        g.__enter__()  # lint: allow(guard-no-with)
+        detach_guard(g)     # lease lifetime ends at revocation, not scope
         self._leases[th.server] = g
         self.lease_grants += 1
         self.cluster.sim.net.lease_grants += 1
@@ -453,6 +466,9 @@ class DRwLock:
         every reader's freeze is provably broken."""
         if not self._leases:
             return 0
+        san = self.backend.sanitizer
+        if san is not None:
+            san.note_lease_revoke(th, self.h)
         cluster = self.cluster
         sim, net = cluster.sim, cluster.sim.net
         name = cluster.backend_name

@@ -1,0 +1,27 @@
+"""Corpus fixture: E101 raw-verb — raw protocol verbs outside core/.
+
+These are the call pairs the old CI grep hunted with a regex; the AST
+lint sees through the formatting tricks that fooled it.
+"""
+
+
+def leaky_sum(cl, th, handles):
+    total = 0
+    for h in handles:
+        cl.backend.borrow(th, h)  # E101: raw verb
+        total += cl.backend.deref(th, h)  # E101: raw verb
+        cl.backend.drop(th, h)  # E101: raw verb
+    return total
+
+
+def leaky_update(cl, th, h):
+    cl.backend.borrow_mut(th, h)  # E101: raw verb
+    v = cl.backend.deref_mut(th, h)  # E101: raw verb
+    v["k"] = 1
+    cl.backend.drop_ref(th, h)  # E101: raw verb
+
+
+def not_flagged(df, th, h):
+    # kwarg / zero-arg drop is some other API, not the protocol verb
+    df.drop(columns=["a"])
+    h.drop()

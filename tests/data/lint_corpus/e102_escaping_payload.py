@@ -1,0 +1,40 @@
+"""Corpus fixture: E102 escaping-payload — guard payloads read after close."""
+
+
+def stale_read(node, th):
+    with node.read(th) as v:
+        degree = len(v["edges"])
+    return v["edges"][0], degree  # E102: v read after its guard closed
+
+
+def stale_alias(node, th):
+    with node.write(th) as w:
+        snap = w.value  # pure access chain: `snap` aliases the payload
+        w.value["n"] += 1
+    snap["n"] += 1  # E102: alias written through after close
+    return snap
+
+
+def branch_escape(index, col, th, choreograph, cl):
+    # Regression: the guard is the *last* statement of an else-branch, and
+    # the stale read happens after the enclosing `if`.  A block-local scan
+    # misses this; the scan must climb the parent chain.  (This is the exact
+    # shape of a real bug the runtime sanitizer caught in apps/dataframe.py.)
+    if choreograph:
+        srcs = cl.backend.read_many(th, [index[0]])[-1]
+    else:
+        with index[0].read(th) as v:
+            srcs = v
+    acc = 0.0
+    for s_idx in srcs:  # E102: srcs aliases the closed guard's payload
+        with col[s_idx].read(th) as chunk:
+            acc += float(sum(chunk))
+    return acc
+
+
+def not_flagged(node, th, fn):
+    with node.write(th) as w:
+        result = w.update(fn)  # a method's return value is a new object
+    with node.read(th) as v:
+        copied = list(v)
+    return result, copied  # fine: neither aliases the dead payload

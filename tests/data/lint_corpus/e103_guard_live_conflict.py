@@ -1,0 +1,22 @@
+"""Corpus fixture: E103 guard-live-conflict — disposal under a live guard."""
+
+
+def free_under_guard(cl, th, page):
+    with page.read(th) as v:
+        total = sum(v)
+        cl.backend.free(th, page)  # E103: free while page's guard is live
+    return total
+
+
+def transfer_under_guard(cl, th, box, dst):
+    with box.write(th) as w:
+        w.value["owner"] = dst
+        cl.backend.transfer(th, box, dst)  # E103: transfer under live guard
+
+
+def not_flagged(cl, th, page, other):
+    with page.read(th) as v:
+        total = sum(v)
+        cl.backend.free(th, other)  # a *different* handle: fine
+    cl.backend.free(th, page)  # after the guard closed: fine
+    return total

@@ -1,0 +1,29 @@
+"""Corpus fixture: E104 guard-no-with — guards opened without `with`."""
+
+from repro.core.protocol import ReadGuard, WriteGuard
+
+
+def manual_guard(backend, th, h):
+    g = ReadGuard(backend, th, h)  # E104: constructed outside `with`
+    g.__enter__()  # E104: explicit enter, no structural release
+    try:
+        return g.value
+    finally:
+        g.__exit__(None, None, None)
+
+
+def dangling_open(node, th):
+    g = node.write(th)  # E104: guard opened, never a with-context
+    g.value["n"] += 1
+    return g
+
+
+def not_flagged(backend, th, h, node, f, state, tree):
+    with WriteGuard(backend, th, h) as w:  # with-context: fine
+        w.value["n"] = 1
+    with node.read(th):  # with-context: fine
+        pass
+    backend.read(th, h)  # 2-arg legacy shim, not a guard constructor
+    f.read()  # 0-arg file-style read
+    state.write(state.read())  # value plumbing: arg is a call, not a thread
+    state.write(tree)  # lint: allow(guard-no-with) — suppression honored

@@ -1,0 +1,27 @@
+"""Corpus fixture: E105 spawn-capture — handles captured without routing."""
+
+
+def unrouted(cl, boot):
+    shard = cl.backend.alloc(boot, 64, data=[0] * 8)
+    tile = cl.backend.alloc(boot, 64, data=[1] * 8)
+
+    def work(th):
+        with shard.read(th) as v:
+            return sum(v)
+
+    cl.scheduler.spawn(work, parent=boot)  # fine: no handle in the args
+    cl.scheduler.spawn(lambda th: shard, parent=boot)  # E105: shard captured
+    cl.scheduler.spawn(work, tile, parent=boot)  # E105: tile captured
+
+
+def routed(cl, boot):
+    shard = cl.backend.alloc(boot, 64, data=[0] * 8)
+
+    def work(th):
+        with shard.read(th) as v:
+            return sum(v)
+
+    # explicit placement: the closure runs where the data lives
+    cl.scheduler.spawn(work, shard, server=cl.backend.locate(shard), parent=boot)
+    cl.scheduler.spawn_near(shard, work, parent=boot)
+    cl.scheduler.spawn_to(shard, work, parent=boot)

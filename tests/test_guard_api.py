@@ -246,8 +246,9 @@ def test_payload_use_after_guard_exit_fails(backend):
     assert cl.backend.read(ths[1], h) == 8
 
 
-def test_guard_reentry_rejected():
-    cl, ths = make()
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_guard_reentry_rejected(backend):
+    cl, ths = make(backend)
     h = cl.backend.alloc(ths[0], 64, 1)
     g = h.read(ths[0])
     with g:
@@ -309,8 +310,28 @@ def test_raising_region_still_settles():
     assert box.live_refs == 0
 
 
-def test_raising_mutex_critical_section_still_unlocks():
-    cl, ths = make()
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_raising_write_guard_baseline_parity(backend):
+    """The exception-safety contract is backend-independent: a raising
+    write-guard body releases the mutable borrow and publishes the write on
+    gam/grappa exactly as on drust (the drust-only twin above additionally
+    pins the owner-slot write-back counter)."""
+    cl, ths = make(backend)
+    t0, t1 = ths[0], ths[1]
+    box = cl.backend.alloc(t0, 64, 10)
+    with pytest.raises(ValueError):
+        with box.write(t1) as w:
+            w.set(99)
+            raise ValueError("app bug")
+    assert cl.backend.read(t0, box) == 99         # the write landed
+    with box.write(t0) as w:                      # borrow did not leak
+        w.set(100)
+    assert cl.backend.read(t0, box) == 100
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_raising_mutex_critical_section_still_unlocks(backend):
+    cl, ths = make(backend)
     mtx = DMutex(cl, ths[0], value=0)
     with pytest.raises(ZeroDivisionError):
         mtx.with_lock(ths[1], lambda obj: 1 / 0)

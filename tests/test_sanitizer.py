@@ -1,0 +1,216 @@
+"""Runtime borrow/cid sanitizer (`Cluster(sanitize=True)`, docs/analysis.md).
+
+Two contracts, tested in both directions:
+
+* **Observation-only** — with the sanitizer installed, the simulated
+  trajectory (makespan, net counters, payload digests) is byte-identical
+  to a sanitize-off run for every app x backend.
+* **It actually trips** — each violation class (payload use-after-close,
+  mutation under a read borrow, guard leaks at retire, lock-order
+  inversion, spec-cid double/phantom disposition) raises a structured
+  ``SanitizerError`` with event provenance.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import pytest
+
+from repro.analysis.sanitizer import Sanitizer, SanitizerError
+from repro.core import Cluster, DMutex
+from repro.apps.dataframe import run_dataframe
+from repro.apps.kvstore import run_kvstore
+from repro.apps.socialnet import run_socialnet
+
+BACKENDS = ("drust", "gam", "grappa")
+APPS = {
+    "socialnet": (run_socialnet, dict(n_requests=40)),
+    "dataframe": (run_dataframe, dict(n_ops=2)),
+    "kvstore": (run_kvstore, dict(n_keys=128, n_ops=200, txn_frac=0.3)),
+}
+
+
+# --------------------------------------------------------------------------
+#  Observation-only: byte-identical trajectories, every app x backend
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("app", sorted(APPS))
+def test_apps_clean_and_byte_identical_under_sanitize(
+        app, backend, monkeypatch):
+    fn, kw = APPS[app]
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    r_on = fn(4, backend=backend, **kw)       # raises on any violation
+    trace_len = len(Sanitizer.last.trace)
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    r_off = fn(4, backend=backend, **kw)
+    assert r_on.makespan_us == r_off.makespan_us
+    assert r_on.net == r_off.net
+    assert r_on.extra.get("payload_digest") == r_off.extra.get(
+        "payload_digest")
+    if backend == "drust":
+        # drust's guard surface is what the trace records; baselines in
+        # socialnet route through read_many RPC (empty trace is by design).
+        assert trace_len > 0
+
+
+@pytest.mark.parametrize("app", sorted(APPS))
+def test_apps_clean_on_the_ooo_plane_under_sanitize(app, monkeypatch):
+    fn, kw = APPS[app]
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    r = fn(4, backend="drust", qps_per_thread=4, ooo=True, **kw)
+    assert r.makespan_us > 0
+    assert len(Sanitizer.last.trace) > 0
+
+
+def test_kvstore_prefetch_spec_ledger_clean(monkeypatch):
+    # Speculative prefetch under sanitize: every spec cid the runtime mints
+    # must be disposed exactly once (used / wasted / dropped) — checked
+    # against DrustRuntime.spec_log at makespan.
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    r = run_kvstore(4, "drust", n_keys=128, n_ops=300, prefetch_window=8,
+                    sanitize=True)
+    assert r.net["speculative_fetches"] > 0
+
+
+# --------------------------------------------------------------------------
+#  Open-guard accounting (always on, sanitize or not)
+# --------------------------------------------------------------------------
+def test_guard_stats_track_open_guards():
+    cl = Cluster(2, backend="drust", sanitize=False)
+    t0 = cl.main_thread(0)
+    h = cl.backend.alloc(t0, 64, 1)
+    g = h.read(t0)
+    g.__enter__()
+    assert cl.backend.guard_stats["open_read_guards"] == 1
+    assert cl.backend.open_by_tid[t0.tid] == 1
+    g.close()
+    assert cl.backend.guard_stats["open_read_guards"] == 0
+    assert cl.backend.open_by_tid == {}
+    with h.write(t0) as w:
+        assert cl.backend.guard_stats["open_write_guards"] == 1
+        w.set(2)
+    assert cl.backend.guard_stats["open_write_guards"] == 0
+
+
+def test_retire_with_open_guard_warns_without_sanitize():
+    cl = Cluster(2, backend="drust", sanitize=False)
+    th = cl.scheduler.spawn(lambda t: None, server=0)
+    h = cl.backend.alloc(th, 64, 1)
+    g = h.read(th)
+    g.__enter__()
+    with pytest.warns(RuntimeWarning, match="open guard"):
+        cl.scheduler.retire(th)
+
+
+def test_retire_with_open_guard_raises_under_sanitize():
+    cl = Cluster(2, backend="drust", sanitize=True)
+    th = cl.scheduler.spawn(lambda t: None, server=0)
+    h = cl.backend.alloc(th, 64, 1)
+    g = h.read(th)
+    g.__enter__()
+    with pytest.raises(SanitizerError, match="retired with 1 live guard"):
+        cl.scheduler.retire(th)
+
+
+def test_clean_retire_neither_warns_nor_raises():
+    cl = Cluster(2, backend="drust", sanitize=True)
+    th = cl.scheduler.spawn(lambda t: None, server=0)
+    h = cl.backend.alloc(th, 64, 1)
+    with h.read(th):
+        pass
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        cl.scheduler.retire(th)
+
+
+# --------------------------------------------------------------------------
+#  Tombstoned payload snapshots
+# --------------------------------------------------------------------------
+def test_payload_use_after_close_trips():
+    cl = Cluster(2, backend="drust", sanitize=True)
+    t0 = cl.main_thread(0)
+    h = cl.backend.alloc(t0, 64, [1, 2, 3])
+    with h.read(t0) as v:
+        assert v[0] == 1                      # fine while the guard is open
+    with pytest.raises(SanitizerError, match="after its guard closed"):
+        v[0]
+
+
+def test_mutation_under_read_borrow_trips_at_close():
+    cl = Cluster(2, backend="drust", sanitize=True)
+    t0 = cl.main_thread(0)
+    h = cl.backend.alloc(t0, 64, [1, 2, 3])
+    with pytest.raises(SanitizerError, match="immutable read borrow"):
+        with h.read(t0) as v:
+            v.append(9)
+
+
+def test_publishing_a_snapshot_through_a_write_guard_is_adopted():
+    # `w.set(v)` while v's read guard is open is publication, not
+    # use-after-close: the sanitizer adopts a plain copy.
+    cl = Cluster(2, backend="drust", sanitize=True)
+    t0 = cl.main_thread(0)
+    a = cl.backend.alloc(t0, 64, [1, 2, 3])
+    b = cl.backend.alloc(t0, 64, [0])
+    with a.read(t0) as v:
+        with b.write(t0) as w:
+            w.set(v)
+    assert cl.backend.read(t0, b) == [1, 2, 3]   # usable after both closed
+
+
+# --------------------------------------------------------------------------
+#  Lock order (lockdep) and the spec-cid ledger
+# --------------------------------------------------------------------------
+def test_lock_order_inversion_trips():
+    cl = Cluster(2, backend="drust", sanitize=True)
+    t0 = cl.main_thread(0)
+    t1 = cl.main_thread(1)
+    a = DMutex(cl, t0, value=0)
+    b = DMutex(cl, t0, value=0)
+    a.lock(t0); b.lock(t0); b.unlock(t0); a.unlock(t0)   # order A -> B
+    b.lock(t1)
+    with pytest.raises(SanitizerError, match="order inverted"):
+        a.lock(t1)                                        # order B -> A
+
+
+def test_kvstore_txn_sorted_buckets_lockdep_clean():
+    # The kvstore transactional path locks its buckets in sorted order —
+    # the discipline lockdep certifies (already covered by the matrix test,
+    # pinned here explicitly with locks contended across threads).
+    r = run_kvstore(4, "drust", n_keys=128, n_ops=200, txn_frac=0.5,
+                    sanitize=True)
+    assert r.makespan_us > 0
+
+
+def test_spec_cid_double_and_phantom_disposition_trip():
+    cl = Cluster(2, backend="drust", sanitize=True)
+    t0 = cl.main_thread(0)
+    san = cl.sanitizer
+    san.note_spec(t0, 42)
+    san.note_spec_dispose(42, "used", True)
+    with pytest.raises(SanitizerError, match="disposed twice"):
+        san.note_spec_dispose(42, "used", True)
+    with pytest.raises(SanitizerError, match="phantom"):
+        san.note_spec_dispose(99, "wasted", True)
+
+
+# --------------------------------------------------------------------------
+#  Fail-over reconciliation
+# --------------------------------------------------------------------------
+def test_failover_reconciles_dead_threads_guards():
+    # A thread that dies with its server holds an open read guard; recovery
+    # force-releases the borrow and the sanitizer must agree (no leak at
+    # final_check, no phantom open guard afterwards).
+    cl = Cluster(3, backend="drust", replicate=True, sanitize=True)
+    t0 = cl.main_thread(0)
+    t2 = cl.main_thread(0)
+    t2.server = 2
+    box = cl.backend.alloc(t0, 64, b"x", server=0)
+    cl.replicator.flush_epoch()
+    g = box.read(t2)
+    g.__enter__()                         # dies open with server 2
+    rep = cl.recovery.fail_and_recover(2, t0)
+    assert rep.released_borrows == 1
+    cl.makespan_us()                      # final_check: must not raise
+    assert any(e.kind == "failover" for e in cl.sanitizer.trace)
